@@ -1,0 +1,106 @@
+"""Shared benchmark harness.
+
+Measures both REAL wall time of the implementation's operations and the
+DERIVED time from the calibrated network model (core/network.NetModel),
+since this container's single CPU core is not representative of
+RNIC/ICI-attached hosts.  Both columns are reported.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import pickle
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get_arch
+from repro.core import fork
+from repro.core.instance import ModelInstance
+from repro.core.network import Network
+from repro.models import lm
+from repro.platform.node import NodeRuntime
+
+# the paper's function suite, mapped to instance sizes (see micro.py)
+FUNCTIONS = {
+    "hello": "micro-hello",
+    "json": "micro-small",
+    "image": "micro-medium",
+    "recognition": "micro-large",
+}
+
+PAGE_ELEMS = 4096
+
+
+def make_cluster(n_nodes: int = 4, cache: bool = False, transport="dct"):
+    net = Network(transport=transport)
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=PAGE_ELEMS,
+                         cache_enabled=cache) for i in range(n_nodes)]
+    return net, nodes
+
+
+_PARAMS_CACHE: Dict[str, dict] = {}
+
+
+def params_for(fname: str):
+    if fname not in _PARAMS_CACHE:
+        cfg = get_arch(FUNCTIONS[fname])
+        _PARAMS_CACHE[fname] = lm.init_params(jax.random.PRNGKey(0), cfg)
+    return _PARAMS_CACHE[fname]
+
+
+def deploy_parent(node, fname: str) -> ModelInstance:
+    cfg = get_arch(FUNCTIONS[fname])
+    inst = ModelInstance.create(node, cfg.name, params_for(fname))
+    return inst
+
+
+def touch_fraction(inst: ModelInstance, frac: float, prefetch: int = 0):
+    """Simulate a function touching `frac` of the parent's memory
+    (the paper's synthetic micro-function)."""
+    for name in inst.leaf_names:
+        vma = inst.aspace[name]
+        n = max(1, int(round(vma.npages * frac)))
+        for p in range(n):
+            inst.touch_pages(name, [p], prefetch=prefetch)
+
+
+@dataclasses.dataclass
+class Timed:
+    wall_s: float
+    sim_s: float
+    out: object = None
+
+
+def timed(net: Network, fn: Callable, *args, **kw) -> Timed:
+    s0 = net.sim_time
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return Timed(time.perf_counter() - t0, net.sim_time - s0, out)
+
+
+def checkpoint_blob(inst: ModelInstance) -> bytes:
+    """C/R baseline: serialize the FULL container state to a file blob."""
+    buf = io.BytesIO()
+    data = {n: np.asarray(inst.ensure_tensor(n)) for n in inst.leaf_names}
+    pickle.dump(data, buf, protocol=4)
+    return buf.getvalue()
+
+
+def restore_from_blob(node, arch: str, blob: bytes) -> ModelInstance:
+    data = pickle.loads(blob)
+    tree = {k: jnp.asarray(v) for k, v in data.items()}
+    return ModelInstance.create(node, arch, tree)
+
+
+def fmt_csv(rows: List[dict]) -> str:
+    out = []
+    for r in rows:
+        name = r.pop("name")
+        us = r.pop("us_per_call", "")
+        derived = ";".join(f"{k}={v}" for k, v in r.items())
+        out.append(f"{name},{us},{derived}")
+    return "\n".join(out)

@@ -1,0 +1,55 @@
+"""Figure 12: prepare / startup / execution phase breakdown, per function,
+MITOSIS vs CRIU-local vs CRIU-remote."""
+from __future__ import annotations
+
+from benchmarks.common import (FUNCTIONS, checkpoint_blob, deploy_parent,
+                               make_cluster, restore_from_blob, timed,
+                               touch_fraction)
+from repro.core import fork
+
+TOUCH = 0.6
+
+
+def run():
+    rows = []
+    for fname in FUNCTIONS:
+        net, nodes = make_cluster(3)
+        parent = deploy_parent(nodes[0], fname)
+
+        # MITOSIS
+        tp = timed(net, fork.fork_prepare, nodes[0], parent)
+        hid, key = tp.out
+        ts = timed(net, fork.fork_resume, nodes[1], "node0", hid, key,
+                   prefetch=1)
+        te = timed(net, touch_fraction, ts.out, TOUCH, 1)
+        rows.append(dict(
+            name=f"fig12.mitosis.{fname}",
+            us_per_call=int((tp.wall_s + ts.wall_s + te.wall_s) * 1e6),
+            prepare_us=int(tp.wall_s * 1e6),
+            startup_us=int(ts.wall_s * 1e6),
+            exec_us=int(te.wall_s * 1e6),
+            exec_sim_us=int(te.sim_s * 1e6),
+            descriptor_kb=round(len(nodes[0].seeds[hid].blob) / 1024, 1)))
+
+        # CRIU-local: checkpoint + full file copy + restore
+        tc = timed(net, checkpoint_blob, parent)
+        copy_s = len(tc.out) / net.model.rdma_bw
+        tr = timed(net, restore_from_blob, nodes[2], parent.arch, tc.out)
+        rows.append(dict(
+            name=f"fig12.criu_local.{fname}",
+            us_per_call=int((tc.wall_s + copy_s + tr.wall_s) * 1e6),
+            prepare_us=int(tc.wall_s * 1e6),
+            startup_us=int((copy_s + tr.wall_s) * 1e6),
+            exec_us=0, ckpt_mb=round(len(tc.out) / 2**20, 1)))
+
+        # CRIU-remote: on-demand pages through a DFS (dfs_lat per fault)
+        nfaults = sum(max(1, int(v.npages * TOUCH))
+                      for v in parent.aspace.values())
+        dfs_exec = nfaults * net.model.dfs_lat + \
+            TOUCH * parent.total_bytes() / net.model.rdma_bw
+        rows.append(dict(
+            name=f"fig12.criu_remote.{fname}",
+            us_per_call=int((tc.wall_s + dfs_exec) * 1e6),
+            prepare_us=int(tc.wall_s * 1e6),
+            exec_sim_us=int(dfs_exec * 1e6), faults=nfaults))
+    return rows

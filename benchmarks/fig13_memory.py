@@ -1,0 +1,48 @@
+"""Figure 13: per-function memory — provisioned (before running, hatched)
+vs runtime (colored), per technique, amortized per machine (m=4)."""
+from __future__ import annotations
+
+from benchmarks.common import FUNCTIONS, deploy_parent, make_cluster, touch_fraction
+from repro.core import fork
+
+TOUCH = 0.6
+M = 4  # machines
+
+
+def run():
+    rows = []
+    for fname in FUNCTIONS:
+        # Caching: one cached instance per machine (O(n)>=O(m))
+        net, nodes = make_cluster(M)
+        for nd in nodes:
+            deploy_parent(nd, fname)
+        caching_prov = sum(nd.memory_bytes() for nd in nodes) / M
+
+        # MITOSIS: ONE seed across the cluster
+        net, nodes = make_cluster(M)
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        mit_prov = sum(nd.memory_bytes() for nd in nodes) / M
+        kids = [fork.fork_resume(nd, "node0", hid, key, prefetch=1)
+                for nd in nodes[1:]]
+        for k in kids:
+            touch_fraction(k, TOUCH, 1)
+        mit_runtime = sum(nd.memory_bytes() for nd in nodes) / M - mit_prov
+
+        # C/R: provisioned = checkpoint file bytes / m; runtime = full restore
+        ckpt_prov = parent.total_bytes() / M
+        cr_runtime = parent.total_bytes()
+
+        rows.append(dict(name=f"fig13.caching.{fname}",
+                         us_per_call="",
+                         provisioned_mb=round(caching_prov / 2**20, 2),
+                         runtime_mb=0.0))
+        rows.append(dict(name=f"fig13.mitosis.{fname}",
+                         us_per_call="",
+                         provisioned_mb=round(mit_prov / 2**20, 2),
+                         runtime_mb=round(mit_runtime / 2**20, 2)))
+        rows.append(dict(name=f"fig13.criu.{fname}",
+                         us_per_call="",
+                         provisioned_mb=round(ckpt_prov / 2**20, 2),
+                         runtime_mb=round(cr_runtime / 2**20, 2)))
+    return rows

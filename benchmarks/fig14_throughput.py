@@ -1,0 +1,36 @@
+"""Figure 14: peak fork throughput + bottleneck analysis: what limits a
+single seed — parent NIC bandwidth vs child CPU vs RPC handlers."""
+from __future__ import annotations
+
+from benchmarks.common import FUNCTIONS, deploy_parent, make_cluster, timed, touch_fraction
+from repro.core import fork
+
+TOUCH = 0.6
+K = 6  # forks measured
+
+
+def run():
+    rows = []
+    for fname in FUNCTIONS:
+        net, nodes = make_cluster(3)
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        net.reset_meter()
+        t = timed(net, lambda: [
+            touch_fraction(fork.fork_resume(nodes[1 + i % 2], "node0", hid, key,
+                                            prefetch=1), TOUCH, 1)
+            for i in range(K)])
+        bytes_per_fork = net.meter["rdma_bytes"] / K
+        # bottleneck model (paper §7.2): parent NIC serves rdma_bw
+        nic_forks_per_s = net.model.rdma_bw / max(bytes_per_fork, 1)
+        rpc_per_fork = net.meter["rpc_ops"] / K
+        rpc_cap = 1.1e6 / max(rpc_per_fork, 1)      # paper: 1.1M rpc/s
+        rows.append(dict(
+            name=f"fig14.mitosis.{fname}",
+            us_per_call=int(t.wall_s / K * 1e6),
+            sim_us_per_fork=int(t.sim_s / K * 1e6),
+            mb_per_fork=round(bytes_per_fork / 2**20, 1),
+            nic_bound_forks_per_s=int(nic_forks_per_s),
+            rpc_bound_forks_per_s=int(rpc_cap),
+            bottleneck="nic" if nic_forks_per_s < rpc_cap else "rpc"))
+    return rows

@@ -1,0 +1,27 @@
+"""Figure 15: prefetch size ∈ {0,1,2,6} — execution time vs runtime memory."""
+from __future__ import annotations
+
+from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
+from repro.core import fork
+
+FN = "image"
+TOUCH = 0.6
+
+
+def run():
+    rows = []
+    for prefetch in (0, 1, 2, 6):
+        net, nodes = make_cluster(2)
+        parent = deploy_parent(nodes[0], FN)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        child = fork.fork_resume(nodes[1], "node0", hid, key)
+        net.reset_meter()
+        t = timed(net, touch_fraction, child, TOUCH, prefetch)
+        rows.append(dict(
+            name=f"fig15.prefetch{prefetch}",
+            us_per_call=int(t.wall_s * 1e6),
+            sim_us=int(t.sim_s * 1e6),
+            faults=child.stats["faults"],
+            pages=child.stats["pages_rdma"],
+            runtime_mb=round(child.resident_bytes() / 2**20, 2)))
+    return rows

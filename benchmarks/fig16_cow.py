@@ -1,0 +1,39 @@
+"""Figures 16+17: COW (on-demand) vs non-COW (read-everything-upfront):
+latency and throughput across touch ratios."""
+from __future__ import annotations
+
+from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
+from repro.core import fork
+
+FN = "image"
+
+
+def run():
+    rows = []
+    for ratio in (0.1, 0.3, 0.6, 0.9, 1.0):
+        # COW / lazy
+        net, nodes = make_cluster(2)
+        parent = deploy_parent(nodes[0], FN)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        t_lazy = timed(net, lambda: touch_fraction(
+            fork.fork_resume(nodes[1], "node0", hid, key), ratio, 1))
+        lazy_bytes = net.meter["rdma_bytes"]
+
+        # non-COW / eager
+        net2, nodes2 = make_cluster(2)
+        parent2 = deploy_parent(nodes2[0], FN)
+        hid2, key2 = fork.fork_prepare(nodes2[0], parent2)
+        t_eager = timed(net2, lambda: fork.fork_resume(
+            nodes2[1], "node0", hid2, key2, lazy=False))
+        eager_bytes = net2.meter["rdma_bytes"]
+
+        rows.append(dict(
+            name=f"fig16.touch{int(ratio*100)}",
+            us_per_call=int(t_lazy.wall_s * 1e6),
+            cow_sim_us=int(t_lazy.sim_s * 1e6),
+            eager_us=int(t_eager.wall_s * 1e6),
+            eager_sim_us=int(t_eager.sim_s * 1e6),
+            cow_mb=round(lazy_bytes / 2**20, 1),
+            eager_mb=round(eager_bytes / 2**20, 1),
+            thpt_ratio=round(eager_bytes / max(lazy_bytes, 1), 2)))
+    return rows

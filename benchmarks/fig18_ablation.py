@@ -1,0 +1,83 @@
+"""Figure 18: optimization ladder — +lean executor (GL), +one-sided
+descriptor fetch (FD), +DCT transport, +no-copy page mapping, +prefetch."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import (checkpoint_blob, deploy_parent, make_cluster,
+                               restore_from_blob, timed, touch_fraction)
+from repro.core import fork
+from repro.core.lean import LeanExecutorPool
+
+TOUCH = 0.6
+
+
+def _fork_exec(net, nodes, hid, key, *, dfetch, lazy, prefetch):
+    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=lazy,
+                             descriptor_fetch=dfetch, prefetch=prefetch)
+    touch_fraction(child, TOUCH, prefetch)
+    return child
+
+
+def run():
+    rows = []
+    for fname in ("json", "recognition"):
+        # baseline: cold "containerization" = compile-equivalent fixed cost
+        # (paper: ~100 ms runC) + RPC descriptor + RC transport + eager copy
+        lean_cold_s = 0.100
+
+        net, nodes = make_cluster(2, transport="rc")
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        t0 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rpc",
+                   lazy=False, prefetch=0)
+        base = t0.wall_s + lean_cold_s
+        rows.append(dict(name=f"fig18.baseline.{fname}",
+                         us_per_call=int(base * 1e6),
+                         sim_us=int((t0.sim_s + lean_cold_s) * 1e6)))
+
+        # +GL: lean executor pool removes the fixed containerization cost
+        rows.append(dict(name=f"fig18.+GL.{fname}",
+                         us_per_call=int(t0.wall_s * 1e6),
+                         sim_us=int(t0.sim_s * 1e6)))
+
+        # +FD: descriptor over one-sided read instead of RPC
+        net, nodes = make_cluster(2, transport="rc")
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        t1 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+                   lazy=False, prefetch=0)
+        rows.append(dict(name=f"fig18.+FD.{fname}",
+                         us_per_call=int(t1.wall_s * 1e6),
+                         sim_us=int(t1.sim_s * 1e6)))
+
+        # +DCT: connectionless transport (RC pays per-connection setup)
+        net, nodes = make_cluster(2, transport="dct")
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        t2 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+                   lazy=False, prefetch=0)
+        rows.append(dict(name=f"fig18.+DCT.{fname}",
+                         us_per_call=int(t2.wall_s * 1e6),
+                         sim_us=int(t2.sim_s * 1e6)))
+
+        # +nocopy: map pages lazily instead of eager full copy
+        net, nodes = make_cluster(2, transport="dct")
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        t3 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+                   lazy=True, prefetch=0)
+        rows.append(dict(name=f"fig18.+nocopy.{fname}",
+                         us_per_call=int(t3.wall_s * 1e6),
+                         sim_us=int(t3.sim_s * 1e6)))
+
+        # +prefetch
+        net, nodes = make_cluster(2, transport="dct")
+        parent = deploy_parent(nodes[0], fname)
+        hid, key = fork.fork_prepare(nodes[0], parent)
+        t4 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+                   lazy=True, prefetch=1)
+        rows.append(dict(name=f"fig18.+prefetch.{fname}",
+                         us_per_call=int(t4.wall_s * 1e6),
+                         sim_us=int(t4.sim_s * 1e6)))
+    return rows

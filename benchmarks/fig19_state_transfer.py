@@ -1,0 +1,93 @@
+"""Figure 19: (a) state transfer between two functions (fork vs Fn/Redis
+messaging vs C/R), (b) FINRA end-to-end vs #audit instances."""
+from __future__ import annotations
+
+import pickle
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import deploy_parent, make_cluster, timed
+from repro.configs.base import get_arch
+from repro.core import fork
+from repro.core.instance import ModelInstance
+from repro.models import lm
+from repro.platform.coordinator import Coordinator, FunctionDef
+from repro.platform.workflow import Workflow, WorkflowFunc, run_workflow
+
+
+def run():
+    rows = []
+    # (a) transfer 1/8/64 MB between two functions
+    for mb in (1, 8, 64):
+        payload = np.random.default_rng(0).standard_normal(
+            mb * 2**20 // 4).astype(np.float32)
+
+        # fork path: upstream pre-materializes; downstream maps pages
+        net, nodes = make_cluster(2)
+        up = deploy_parent(nodes[0], "hello")
+        up.add_tensor("globals/data", jnp.asarray(payload))
+        hid, key = fork.fork_prepare(nodes[0], up)
+        t_fork = timed(net, lambda: np.asarray(
+            fork.fork_resume(nodes[1], "node0", hid, key, prefetch=1)
+            .ensure_tensor("globals/data")))
+        np.testing.assert_allclose(t_fork.out, payload)
+
+        # message path: serialize -> copy -> deserialize (Redis-style)
+        t0 = time.perf_counter()
+        blob = pickle.dumps(payload, protocol=4)
+        redis_copy = 2 * len(blob) / net.model.rdma_bw + 27e-3  # via store
+        got = pickle.loads(blob)
+        t_msg_wall = time.perf_counter() - t0
+        rows.append(dict(
+            name=f"fig19a.transfer{mb}mb",
+            us_per_call=int(t_fork.wall_s * 1e6),
+            fork_sim_us=int(t_fork.sim_s * 1e6),
+            msg_wall_us=int(t_msg_wall * 1e6),
+            msg_sim_us=int((t_msg_wall + redis_copy) * 1e6),
+            # calibrated-network comparison (serialize+store vs one-sided map)
+            speedup=round((t_msg_wall + redis_copy) /
+                          max(t_fork.sim_s, 1e-9), 1)))
+
+    # (b) FINRA: fused fetch upstream, N audit children
+    cfg = get_arch("micro-hello")
+    params = lm.init_params(__import__("jax").random.PRNGKey(0), cfg)
+    market = np.random.default_rng(1).standard_normal(6 * 2**20 // 4).astype(np.float32)
+
+    def fetch(inst, ctx):
+        inst.add_tensor("globals/market", jnp.asarray(market))
+        return {"fetched": True}
+
+    def audit(inst, ctx):
+        if "msg:fetchData" in ctx:
+            data = ctx["msg:fetchData"]["market"]
+        else:
+            data = np.asarray(inst.ensure_tensor("globals/market"))
+        return {"violations": int((data > 3.0).sum())}
+
+    def fetch_msg(inst, ctx):
+        return {"market": market, "fetched": True}
+
+    for n_rules in (2, 8):
+        for transfer, fetch_fn in (("fork", fetch), ("message", fetch_msg)):
+            net, nodes = make_cluster(4)
+            coord = Coordinator(net, nodes)
+            coord.register_function(FunctionDef("finra-fetch", cfg.name,
+                                                lambda: params, fetch_fn))
+            coord.register_function(FunctionDef("finra-audit", cfg.name,
+                                                lambda: params, audit))
+            wf = Workflow("finra")
+            wf.add(WorkflowFunc("fetchData", "finra-fetch"))
+            wf.add(WorkflowFunc("runAuditRule", "finra-audit",
+                                fork_from="fetchData"))
+            wf.edge("fetchData", "runAuditRule")
+            t = timed(net, run_workflow, coord, wf, {}, transfer=transfer,
+                      fan_out={"runAuditRule": n_rules})
+            rows.append(dict(
+                name=f"fig19b.finra.{transfer}.n{n_rules}",
+                us_per_call=int(t.wall_s * 1e6),
+                sim_us=int(t.sim_s * 1e6),
+                msg_bytes=net.meter.get("msg_bytes", 0),
+                rdma_bytes=net.meter.get("rdma_bytes", 0)))
+    return rows

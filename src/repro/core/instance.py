@@ -1,0 +1,229 @@
+"""ModelInstance — the "container" of MITOSIS-JAX.
+
+An instance's state (weights / KV pages / optimizer state) lives in its
+node's PagePool behind per-tensor VMAs.  Children created by fork hold page
+tables pointing at ancestor frames; the *fault handler* (`fetch_pages`)
+materializes pages on demand over one-sided reads, with prefetch, sibling
+page caching (MITOSIS+cache) and RPC fallback; writes are copy-on-write.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import descriptor as desc_mod
+from repro.core.network import AccessRevoked
+from repro.core.pagetable import F_DIRTY, F_PRESENT, VMA, AddressSpace
+from repro.memory import paging
+
+
+class ModelInstance:
+    def __init__(self, node, arch: str, kind: str, aspace: AddressSpace,
+                 leaf_paths: List[List[Any]], leaf_names: List[str],
+                 ancestry: List[str], registers: Dict[str, Any]):
+        self.node = node
+        self.arch = arch
+        self.kind = kind
+        self.aspace = aspace
+        self.leaf_paths = leaf_paths
+        self.leaf_names = leaf_names
+        self.ancestry = ancestry            # hop h -> ancestry[h-1]
+        self.registers = registers
+        self._tensors: Dict[str, jax.Array] = {}
+        self._owned_frames: Dict[str, list] = {}
+        self.instance_id = node.new_instance_id()
+        self.stats = {"faults": 0, "pages_rdma": 0, "pages_rpc": 0,
+                      "pages_cached": 0, "pages_local": 0, "cow_pages": 0}
+        node.instances[self.instance_id] = self
+
+    # ------------------------------------------------------------------
+    # construction from a concrete pytree (the "running container")
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def create(cls, node, arch: str, pytree, kind: str = "weights",
+               registers: Optional[dict] = None):
+        names, paths, leaves = desc_mod.flatten_with_names(pytree)
+        inst = cls(node, arch, kind, {}, paths, names, [], registers or {"step": 0})
+        for name, leaf in zip(names, leaves):
+            leaf = jnp.asarray(leaf)
+            pages = paging.to_pages(leaf, node.pool.page_elems)
+            frames = node.pool.alloc(leaf.dtype, pages.shape[0])
+            node.pool.write_pages(leaf.dtype, frames, pages)
+            inst._owned_frames.setdefault(jnp.dtype(leaf.dtype).name, []).extend(
+                frames.tolist())
+            inst.aspace[name] = VMA.new_local(name, leaf.shape, leaf.dtype, frames)
+            inst._tensors[name] = leaf
+        return inst
+
+    # ------------------------------------------------------------------
+    # the fault handler (§5.4 Table 2)
+    # ------------------------------------------------------------------
+
+    def fetch_pages(self, name: str, pages: np.ndarray, prefetch: int = 0) -> None:
+        """Materialize the given (missing) pages of a VMA, plus `prefetch`
+        adjacent pages per fault — the RDMA-aware page-fault handler."""
+        vma = self.aspace[name]
+        missing = set(vma.missing_pages().tolist())
+        want = [p for p in np.atleast_1d(pages).tolist() if p in missing]
+        if prefetch:
+            extra = []
+            for p in want:
+                extra.extend(q for q in range(p + 1, p + 1 + prefetch)
+                             if q in missing and q not in want)
+            want = sorted(set(want) | set(extra))
+        if not want:
+            return
+        self.stats["faults"] += 1
+        self._tensors.pop(name, None)          # invalidate assembled cache
+
+        by_hop: Dict[int, list] = {}
+        for p in want:
+            by_hop.setdefault(int(vma.owner_hop[p]), []).append(p)
+
+        for hop, plist in sorted(by_hop.items()):
+            if hop == 0:
+                # local frames that lost PRESENT (swapped out): fallback path
+                self._fallback_fetch(vma, self.node.node_id, plist)
+                continue
+            owner = self.ancestry[hop - 1]
+            key = vma.dc_keys.get(hop, -1)
+            remote_frames = vma.frames[plist]
+
+            # sibling page cache (MITOSIS+cache)
+            uncached, cached_local = [], {}
+            for p, rf in zip(plist, remote_frames.tolist()):
+                lf = self.node.page_cache_get(owner, vma.dtype, rf)
+                if lf is not None:
+                    cached_local[p] = lf
+                else:
+                    uncached.append(p)
+            for p, lf in cached_local.items():
+                vma.mark_resident([p], [lf])
+                self.stats["pages_cached"] += 1
+
+            if not uncached:
+                continue
+            try:
+                data = self.node.network.rdma_read_pages(
+                    self.node.node_id, owner, vma.dtype,
+                    vma.frames[uncached], key)
+                self.stats["pages_rdma"] += len(uncached)
+            except AccessRevoked:
+                # VA->PA changed at the owner (swap, reclaim): RPC fallback
+                self._fallback_fetch(vma, owner, uncached)
+                continue
+            local = self.node.pool.alloc(vma.dtype, len(uncached))
+            self.node.pool.write_pages(vma.dtype, local, data)
+            self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
+            remote_of = vma.frames[uncached].tolist()
+            vma.mark_resident(uncached, local)
+            for p, rf, lf in zip(uncached, remote_of, local.tolist()):
+                self.node.page_cache_put(owner, vma.dtype, rf, int(lf))
+
+    def _fallback_fetch(self, vma: VMA, owner: str, plist: list) -> None:
+        net = self.node.network
+        frames = vma.frames[plist]
+        data = net.rpc(self.node.node_id, owner,
+                       len(plist) * self.node.pool.page_elems
+                       * np.dtype(vma.dtype).itemsize,
+                       net.nodes[owner].fallback_serve, vma.dtype, frames)
+        local = self.node.pool.alloc(vma.dtype, len(plist))
+        self.node.pool.write_pages(vma.dtype, local, data)
+        self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
+        vma.mark_resident(plist, local)
+        self.stats["pages_rpc"] += len(plist)
+
+    # ------------------------------------------------------------------
+    # tensor-level API
+    # ------------------------------------------------------------------
+
+    def touch_pages(self, name: str, pages, prefetch: int = 0) -> None:
+        self.fetch_pages(name, np.asarray(pages), prefetch)
+
+    def ensure_tensor(self, name: str, prefetch: int = 0) -> jax.Array:
+        if name in self._tensors:
+            return self._tensors[name]
+        vma = self.aspace[name]
+        miss = vma.missing_pages()
+        if miss.size:
+            self.fetch_pages(name, miss, prefetch)
+        pages = self.node.pool.read_pages(vma.dtype, vma.frames)
+        t = paging.from_pages(pages, vma.shape, vma.dtype)
+        self._tensors[name] = t
+        return t
+
+    def ensure_all(self, prefetch: int = 0) -> None:
+        for name in self.leaf_names:
+            self.ensure_tensor(name, prefetch)
+
+    def materialize_pytree(self):
+        leaves = [self.ensure_tensor(n) for n in self.leaf_names]
+        return desc_mod.unflatten_from_paths(self.leaf_paths, leaves)
+
+    def write_pages(self, name: str, pages, data) -> None:
+        """COW write: dirty pages land in freshly allocated local frames;
+        ancestor frames are never touched."""
+        vma = self.aspace[name]
+        pages = np.atleast_1d(np.asarray(pages))
+        local = self.node.pool.alloc(vma.dtype, len(pages))
+        self.node.pool.write_pages(vma.dtype, local, data)
+        self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
+        vma.mark_resident(pages, local)
+        vma.mark_dirty(pages)
+        self.stats["cow_pages"] += len(pages)
+        self._tensors.pop(name, None)
+
+    def add_tensor(self, name: str, arr) -> None:
+        """Pre-materialize new state into the instance (workflow globals,
+        KV pages): creates a fresh local VMA — what downstream forks read."""
+        arr = jnp.asarray(arr)
+        pages = paging.to_pages(arr, self.node.pool.page_elems)
+        frames = self.node.pool.alloc(arr.dtype, pages.shape[0])
+        self.node.pool.write_pages(arr.dtype, frames, pages)
+        dt = jnp.dtype(arr.dtype).name
+        self._owned_frames.setdefault(dt, []).extend(frames.tolist())
+        self.aspace[name] = VMA.new_local(name, arr.shape, arr.dtype, frames)
+        if name not in self.leaf_names:
+            self.leaf_names.append(name)
+            self.leaf_paths.append([name])
+        self._tensors[name] = arr
+
+    def write_tensor(self, name: str, arr) -> None:
+        arr = jnp.asarray(arr)
+        vma = self.aspace[name]
+        assert tuple(arr.shape) == vma.shape, (arr.shape, vma.shape)
+        pages = paging.to_pages(arr, self.node.pool.page_elems)
+        self.write_pages(name, np.arange(vma.npages), pages)
+        self._tensors[name] = arr
+
+    # ------------------------------------------------------------------
+    # accounting / lifecycle
+    # ------------------------------------------------------------------
+
+    def total_bytes(self) -> int:
+        return sum(v.nbytes() for v in self.aspace.values())
+
+    def resident_bytes(self) -> int:
+        pe = self.node.pool.page_elems
+        tot = 0
+        for v in self.aspace.values():
+            tot += int(v.resident_mask().sum()) * pe * np.dtype(v.dtype).itemsize
+        return tot
+
+    def resident_fraction(self) -> float:
+        npages = sum(v.npages for v in self.aspace.values())
+        res = sum(int(v.resident_mask().sum()) for v in self.aspace.values())
+        return res / max(npages, 1)
+
+    def free(self) -> None:
+        for dt, frames in self._owned_frames.items():
+            self.node.pool.free(dt, frames)
+        self._owned_frames.clear()
+        self._tensors.clear()
+        self.aspace = {}
+        self.node.instances.pop(self.instance_id, None)

@@ -1,0 +1,115 @@
+"""Page tables with remote/owner-hop bits — the extended PTE of §5.4/5.5.
+
+Each tensor of an instance is one VMA.  Per page we track:
+  owner_hop : 0 = local frame, h>0 = frame lives on the h-th ancestor
+              (4-bit field, <= 15 hops, exactly the paper's PTE encoding)
+  frame     : frame index in the owner's PagePool
+  flags     : PRESENT | DIRTY
+A VMA also carries its DC keys (connection-based access control, §5.4):
+one key per ancestor hop, since after partial COW a VMA can mix pages owned
+by several ancestors (§5.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import numpy as np
+
+MAX_HOPS = 15          # 4 bits in the PTE's ignored bits (paper §5.5)
+
+F_PRESENT = 0x1        # local copy materialized
+F_DIRTY = 0x2          # locally modified (COW'd)
+
+
+@dataclasses.dataclass
+class VMA:
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+    npages: int
+    owner_hop: np.ndarray        # (npages,) uint8
+    frames: np.ndarray           # (npages,) int32, index into owner pool
+    flags: np.ndarray            # (npages,) uint8
+    dc_keys: Dict[int, int] = dataclasses.field(default_factory=dict)
+                                 # hop -> DC key at that ancestor
+
+    @classmethod
+    def new_local(cls, name, shape, dtype, frames):
+        n = len(frames)
+        return cls(
+            name=name, shape=tuple(shape), dtype=str(dtype), npages=n,
+            owner_hop=np.zeros(n, np.uint8),
+            frames=np.asarray(frames, np.int32),
+            flags=np.full(n, F_PRESENT, np.uint8),
+        )
+
+    def child_view(self, parent_key: int) -> "VMA":
+        """Fork: child's pages point one hop further up; nothing resident.
+
+        Pages the parent owned (hop 0) become hop 1, guarded by the freshly
+        assigned `parent_key`; pages the parent itself still reads from
+        ancestors shift one hop up and keep their ancestors' keys.
+        """
+        hop = self.owner_hop.astype(np.int32)
+        # Pages the parent had not COW'd still belong to the same ancestor:
+        # hop h>0 stays pointing at that ancestor, renumbered h+1 in the
+        # child's chain. Hop-0 pages become hop 1 (the parent).
+        new_hop = hop + 1
+        if new_hop.max(initial=0) > MAX_HOPS:
+            raise OverflowError(
+                f"fork depth exceeds {MAX_HOPS} hops (paper §5.5 PTE encoding)")
+        keys = {h + 1: k for h, k in self.dc_keys.items()}
+        keys[1] = parent_key
+        return VMA(
+            name=self.name, shape=self.shape, dtype=self.dtype,
+            npages=self.npages,
+            owner_hop=new_hop.astype(np.uint8),
+            frames=self.frames.copy(),
+            flags=np.zeros(self.npages, np.uint8),
+            dc_keys=keys,
+        )
+
+    # -- queries -------------------------------------------------------------
+
+    def resident_mask(self) -> np.ndarray:
+        return (self.flags & F_PRESENT) != 0
+
+    def missing_pages(self) -> np.ndarray:
+        return np.nonzero(~self.resident_mask())[0].astype(np.int32)
+
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
+
+    # -- updates -------------------------------------------------------------
+
+    def mark_resident(self, pages, local_frames):
+        self.owner_hop[pages] = 0
+        self.frames[pages] = local_frames
+        self.flags[pages] |= F_PRESENT
+
+    def mark_dirty(self, pages):
+        self.flags[pages] |= F_DIRTY
+
+    def table_dict(self) -> dict:
+        return {
+            "name": self.name, "shape": list(self.shape), "dtype": self.dtype,
+            "npages": self.npages,
+            "owner_hop": self.owner_hop.tobytes(),
+            "frames": self.frames.tobytes(),
+            "dc_keys": {int(h): int(k) for h, k in self.dc_keys.items()},
+        }
+
+    @classmethod
+    def from_table_dict(cls, d) -> "VMA":
+        n = d["npages"]
+        return cls(
+            name=d["name"], shape=tuple(d["shape"]), dtype=d["dtype"], npages=n,
+            owner_hop=np.frombuffer(d["owner_hop"], np.uint8).copy(),
+            frames=np.frombuffer(d["frames"], np.int32).copy(),
+            flags=np.zeros(n, np.uint8),
+            dc_keys={int(h): int(k) for h, k in d["dc_keys"].items()},
+        )
+
+
+AddressSpace = Dict[str, VMA]

@@ -1,0 +1,255 @@
+"""Loop-aware cost extraction from compiled (post-SPMD) HLO text.
+
+XLA's `compiled.cost_analysis()` counts while-loop bodies ONCE, which
+undercounts scan-over-layers models by ~depth x.  We therefore walk the HLO
+module ourselves:
+
+  * computations are segmented from the text; every op line records
+    `name -> result type` (a per-computation symbol table);
+  * `while` ops carry `backend_config={"known_trip_count":{"n":N}}` (XLA
+    emits this for lax.scan); nested loops multiply;
+  * dot FLOPs = 2 * prod(result dims) * prod(contracting dims), with
+    contracting sizes resolved through the symbol table;
+  * collective bytes = result-shape bytes per op kind;
+  * HBM traffic model (documented): every materialized buffer is written
+    once and read ~once downstream (2 x result bytes), plus entry
+    parameters read once.  Elementwise FLOPs are ignored (dot-dominated
+    graphs; stated in EXPERIMENTS.md).
+
+All quantities are per-device (the module is the partitioned program);
+callers normalize to global.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DT_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.*\{\s*$")
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_SHAPE = re.compile(r"([a-z]+\d*(?:e\dm\d(?:fn)?)?)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"^((?:\([^)]*\)|[a-z0-9\[\],{}\s])*?)\s*([a-z][a-z0-9\-]*)\(")
+_TRIP = re.compile(r'known_trip_count[":{ ]+n["\s:]+"?(\d+)')
+_CALLED = re.compile(r"(?:body|condition|to_apply|calls)=%?([\w.\-]+)")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(type_str):
+        if dt in _DT_BYTES:
+            out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_dims(type_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += int(n * _DT_BYTES[dt])
+    return total
+
+
+@dataclasses.dataclass
+class OpInfo:
+    name: str
+    opcode: str
+    result_type: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[OpInfo]
+    symbols: Dict[str, str]          # op name -> result type str
+
+
+def parse_computations(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        hdr = _COMP_HDR.match(line.strip())
+        if hdr and "->" in line:
+            cur = Computation(hdr.group(1), [], {})
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OPCODE.match(rest)
+        if not om:
+            continue
+        type_str, opcode = om.group(1).strip(), om.group(2)
+        cur.ops.append(OpInfo(name, opcode, type_str, rest))
+        cur.symbols[name] = type_str
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Trip-count multiplier per computation, walked from ENTRY."""
+    mult: Dict[str, float] = defaultdict(float)
+    entry = None
+    for name, c in comps.items():
+        if any(op.opcode == "while" for op in c.ops) or True:
+            pass
+    # entry = the computation not referenced as body/cond/to_apply/calls
+    referenced = set()
+    refs: Dict[str, List[Tuple[str, float]]] = defaultdict(list)
+    for name, c in comps.items():
+        for op in c.ops:
+            called = _CALLED.findall(op.line)
+            trips = 1.0
+            if op.opcode == "while":
+                tm = _TRIP.search(op.line)
+                trips = float(tm.group(1)) if tm else 1.0
+            for cal in called:
+                referenced.add(cal)
+                refs[name].append((cal, trips if op.opcode == "while" else 1.0))
+    entries = [n for n in comps if n not in referenced]
+    stack = [(e, 1.0) for e in entries]
+    while stack:
+        name, m = stack.pop()
+        if m <= mult[name]:
+            continue
+        mult[name] = m
+        for cal, trips in refs.get(name, ()):  # descend
+            stack.append((cal, m * trips))
+    return dict(mult)
+
+
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(op: OpInfo, sym: Dict[str, str]) -> float:
+    dims = _shape_dims(op.result_type)
+    if not dims:
+        return 0.0
+    out_elems = 1
+    for d in dims[0][1]:
+        out_elems *= d
+    cm = _CONTRACT.search(op.line)
+    contract = 1
+    if cm is not None:
+        # first operand after the opcode parens
+        inner = op.line[op.line.index("(") + 1:]
+        ops = _OPERANDS.findall(inner[:inner.index(")")])
+        if ops:
+            lhs_type = sym.get(ops[0], "")
+            lds = _shape_dims(lhs_type)
+            if lds:
+                idxs = [int(i) for i in cm.group(1).split(",") if i]
+                for i in idxs:
+                    if i < len(lds[0][1]):
+                        contract *= lds[0][1][i]
+    return 2.0 * out_elems * contract
+
+
+# opcodes whose result we exclude from the traffic model (pure bookkeeping)
+_NO_TRAFFIC = {"get-tuple-element", "tuple", "parameter", "constant",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "while", "conditional", "call"}
+
+
+def analyze(hlo: str) -> Dict[str, float]:
+    """Loop-aware per-device totals: dot flops, collective bytes (by kind and
+    total, ring-model), HBM traffic estimate, op counts."""
+    comps = parse_computations(hlo)
+    mult = _multipliers(comps)
+    flops = 0.0
+    traffic = 0.0
+    coll: Counter = Counter()
+    # computations used as fusion bodies: their interiors are not separate
+    # buffers — traffic is accounted at the fusion call site.
+    fusion_bodies = set()
+    inplace_bodies = set()      # fusion bodies doing dynamic-update-slice
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                for cal in _CALLED.findall(op.line):
+                    fusion_bodies.add(cal)
+    for name in fusion_bodies:
+        c = comps.get(name)
+        if c and any(o.opcode in ("dynamic-update-slice", "scatter")
+                     for o in c.ops):
+            inplace_bodies.add(name)
+
+    def _op_traffic(op, symbols) -> float:
+        b = _type_bytes(op.result_type)
+        if op.opcode == "fusion":
+            called = _CALLED.findall(op.line)
+            if any(c in inplace_bodies for c in called):
+                # TPU performs DUS on loop carries in place: the write is the
+                # updated slice, not the whole buffer.  Approximate the slice
+                # as (result - largest operand); CPU's full-copy lowering
+                # would otherwise dominate decode/train caches spuriously.
+                inner = op.line[op.line.index("(") + 1:]
+                names = _OPERANDS.findall(inner[:inner.index(")")])
+                opb = [_type_bytes(symbols.get(n, "")) for n in names]
+                if opb:
+                    return max(b - max(opb), min(x for x in opb if x > 0)
+                               if any(x > 0 for x in opb) else 0)
+        return b
+
+    entry_params = 0.0
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        in_fusion = cname in fusion_bodies
+        for op in comp.ops:
+            if op.opcode == "dot":
+                flops += m * _dot_flops(op, comp.symbols)
+                if in_fusion:
+                    continue
+            kind = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if kind in COLLECTIVES and not in_fusion:
+                b = _type_bytes(op.result_type)
+                coll[kind] += m * b
+                coll[kind + "_ops"] += m
+            if op.opcode.endswith("-done") or in_fusion:
+                continue
+            if op.opcode not in _NO_TRAFFIC:
+                traffic += m * _op_traffic(op, comp.symbols)
+            if op.opcode == "parameter" and m == 1.0:
+                entry_params += _type_bytes(op.result_type)
+    return {
+        "dot_flops": flops,
+        "traffic_bytes": 2.0 * traffic + entry_params,
+        "collectives": dict(coll),
+        "n_computations": len(comps),
+    }
+
+
+def total_collective_bytes(coll: Dict[str, float]) -> float:
+    """Ring-model bytes per device: all-reduce ~2x payload (RS+AG phases)."""
+    tot = 0.0
+    for k in COLLECTIVES:
+        b = coll.get(k, 0)
+        tot += 2 * b if k == "all-reduce" else b
+    return tot
+
+
+# Backwards-compatible helpers -------------------------------------------------
+
+
+def collective_stats(hlo_text: str) -> Dict[str, float]:
+    return analyze(hlo_text)["collectives"]

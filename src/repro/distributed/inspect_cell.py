@@ -1,0 +1,94 @@
+import os
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Dry-run profiler: attributes loop-aware collective bytes / HBM traffic /
+dot FLOPs to HLO ops (with jax op_name metadata), so §Perf hypotheses are
+grounded in the compiled artifact rather than guesses.
+
+  PYTHONPATH=src python -m repro.distributed.inspect_cell granite-34b \
+      prefill_32k [--multi-pod] [--opt k=v]
+"""
+import argparse
+import re
+
+import jax
+
+from repro.distributed import ctx as _ctx
+from repro.distributed import hlo_analysis as H
+
+
+def inspect(arch, shape, multi_pod=False, opts=None, top=18):
+    from repro.launch.dryrun import input_specs
+    spec = input_specs(arch, shape, multi_pod, opts)
+    fn = jax.jit(spec["fn"], donate_argnums=spec["donate"])
+    with _ctx.use_env(spec["env"]):
+        compiled = fn.lower(*spec["args"]).compile()
+    hlo = compiled.as_text()
+    comps = H.parse_computations(hlo)
+    mult = H._multipliers(comps)
+    fusion_bodies = set()
+    for c in comps.values():
+        for op in c.ops:
+            if op.opcode == "fusion":
+                for cal in H._CALLED.findall(op.line):
+                    fusion_bodies.add(cal)
+
+    def opname(line):
+        m = re.search(r'op_name="([^"]+)"', line)
+        return m.group(1)[:90] if m else ""
+
+    coll_rows, traf_rows, flop_rows = [], [], []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if m <= 0:
+            continue
+        for op in comp.ops:
+            kind = op.opcode[:-6] if op.opcode.endswith("-start") else op.opcode
+            if op.opcode == "dot":
+                flop_rows.append((m * H._dot_flops(op, comp.symbols), m,
+                                  op.result_type[:40], opname(op.line)))
+            if cname in fusion_bodies:
+                continue
+            b = H._type_bytes(op.result_type)
+            if kind in H.COLLECTIVES:
+                coll_rows.append((m * b, m, kind, op.result_type[:40],
+                                  opname(op.line)))
+            elif op.opcode not in H._NO_TRAFFIC and not op.opcode.endswith("-done"):
+                traf_rows.append((m * b, m, op.opcode, op.result_type[:40],
+                                  opname(op.line)))
+
+    print(f"=== {arch} x {shape} x {'pod512' if multi_pod else 'pod256'} "
+          f"opts={opts} ===")
+    for title, rows in (("collectives", coll_rows), ("traffic", traf_rows),
+                        ("dot flops", flop_rows)):
+        print(f"-- top {title} (per device, loop-aware) --")
+        tot = sum(r[0] for r in rows)
+        for r in sorted(rows, reverse=True)[:top]:
+            if title == "dot flops":
+                print(f"  {r[0]:12.3e} x{r[1]:6.0f} {r[2]:40s} {r[3]}")
+            else:
+                print(f"  {r[0]/2**30:9.2f}GiB x{r[1]:6.0f} {r[2]:18s} "
+                      f"{r[3]:40s} {r[4]}")
+        print(f"  TOTAL {title}: "
+              + (f"{tot:.3e} flops" if title == "dot flops"
+                 else f"{tot/2**30:.1f} GiB"))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--opt", action="append", default=[])
+    ap.add_argument("--top", type=int, default=18)
+    args = ap.parse_args()
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        import ast
+        try:
+            opts[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            opts[k] = v
+    inspect(args.arch, args.shape, args.multi_pod, opts, args.top)

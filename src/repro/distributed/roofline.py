@@ -1,0 +1,69 @@
+"""Three-term roofline model for TPU v5e (target hardware; CPU is only the
+compile host).
+
+  compute    = HLO_FLOPs   / (chips * 197e12)
+  memory     = HLO_bytes   / (chips * 819e9)
+  collective = coll_bytes  / (chips * 50e9)
+
+HLO_FLOPs / HLO_bytes are normalized to GLOBAL (all-chip) quantities before
+applying the formulas; the dry-run records which normalization was applied.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / ICI link
+HBM_PER_CHIP = 16 * 1024**3  # v5e: 16 GiB
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops_global: float
+    bytes_global: float
+    coll_bytes_global: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_lb(self) -> float:
+        """Lower bound on step time = max of the three terms (perfect overlap)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def fraction_of_roofline(self, model_flops: float) -> float:
+        """Useful-FLOPs throughput achievable at the bound, as a fraction of
+        peak: (model_flops / step_time_lb) / (chips * peak)."""
+        if self.step_time_lb == 0:
+            return 0.0
+        return (model_flops / self.step_time_lb) / (self.chips * PEAK_FLOPS)
+
+    def to_dict(self) -> Dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops_global": self.flops_global, "bytes_global": self.bytes_global,
+            "coll_bytes_global": self.coll_bytes_global, "chips": self.chips,
+        }
+
+
+def roofline(flops_global: float, bytes_global: float,
+             coll_bytes_global: float, chips: int) -> Roofline:
+    return Roofline(
+        compute_s=flops_global / (chips * PEAK_FLOPS),
+        memory_s=bytes_global / (chips * HBM_BW),
+        collective_s=coll_bytes_global / (chips * LINK_BW),
+        flops_global=flops_global,
+        bytes_global=bytes_global,
+        coll_bytes_global=coll_bytes_global,
+        chips=chips,
+    )

@@ -1,0 +1,249 @@
+"""Sharding rules for the production meshes.
+
+Axes: `model` = tensor/expert parallel; `data` (+ `pod` when present) =
+data parallel and FSDP (ZeRO-3-style parameter sharding on a non-model dim).
+
+Policy (per DESIGN.md §5):
+  * attention: head-TP when both H and KV divide the model axis; else shard
+    head_dim (partial-sum contractions); else replicate heads.
+  * MLP: F_ff over model, D over fsdp.  MoE: experts over model (EP).
+  * embeddings: vocab over model, d_model over fsdp.
+  * Mamba/xLSTM in/out projections: fsdp only in the baseline (documented
+    hillclimb: split the fused in_proj to unlock TP — see EXPERIMENTS §Perf).
+  * activations: batch over (pod, data); batch-1 long-context decode shards
+    the KV sequence axis instead (sequence-parallel decode).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisEnv:
+    mesh: Mesh
+    fsdp: Tuple[str, ...]          # param-shard axes
+    dp: Tuple[str, ...]            # batch axes
+    model: str = "model"
+    # attention head policy: "v1" = head-TP only if H and K both divide
+    # (else shard head_dim); "qtp" = shard Q heads over model whenever H
+    # divides, replicate K/V when K doesn't — kills the scores partial-sum
+    # all-reduce for MQA/GQA (§Perf hillclimb, granite/kimi/chameleon).
+    attn_policy: str = "v1"
+    # MoE dispatch: "gspmd" = einsum/sort under GSPMD; "shardmap" = explicit
+    # expert-parallel dispatch with local sort + psum combine (§Perf).
+    moe_impl: str = "gspmd"
+    # Mamba/SSD tensor parallelism: shard the inner (head) dim of the SSD
+    # block over `model` via activation constraints — GSPMD then partitions
+    # the in/out projections by output dim (§Perf, zamba2).
+    mamba_tp: bool = False
+
+    @property
+    def msize(self) -> int:
+        return self.mesh.shape[self.model]
+
+    @property
+    def fsize(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.fsdp]))
+
+    @property
+    def dpsize(self) -> int:
+        return int(np.prod([self.mesh.shape[a] for a in self.dp]))
+
+
+def make_axis_env(mesh: Mesh, fsdp_over_pod: bool = True,
+                  attn_policy: str = "v1", moe_impl: str = "gspmd",
+                  mamba_tp: bool = False) -> AxisEnv:
+    names = mesh.axis_names
+    dp = tuple(a for a in ("pod", "data") if a in names)
+    fsdp = dp if fsdp_over_pod else ("data",)
+    return AxisEnv(mesh=mesh, fsdp=fsdp, dp=dp, attn_policy=attn_policy,
+                   moe_impl=moe_impl, mamba_tp=mamba_tp)
+
+
+def _div(n: int, k: int) -> bool:
+    return n % k == 0
+
+
+def param_pspec(path: str, shape, cfg: ArchConfig, env: AxisEnv) -> P:
+    """Name-based sharding rule. `path` is 'a/b/c' leaf path; stacked block
+    params carry a leading repeat axis (never sharded)."""
+    m, F = env.model, env.fsdp
+    ms, fs = env.msize, env.fsize
+    parts = path.split("/")
+    leaf = parts[-1]
+    owner = parts[-2] if len(parts) >= 2 else ""
+    nd = len(shape)
+
+    def lead(spec_tail):  # prepend None for the stacked repeat axis
+        pad = nd - len(spec_tail)
+        return P(*([None] * pad + list(spec_tail)))
+
+    # ---- embeddings ----
+    # Vocab over model only: sharding D over the data axis conflicts with
+    # batch-sharded token gathers and triggers involuntary full
+    # rematerialization in SPMD (observed in the dry-run).
+    if owner == "embed" and leaf == "tok":
+        return lead([m, None]) if _div(shape[-2], ms) else P()
+    if owner == "embed" and leaf == "out":
+        return lead([None, m]) if _div(shape[-1], ms) else P()
+
+    # ---- attention ----
+    if owner == "attn" or (len(parts) >= 3 and parts[-3] == "attn"):
+        H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        if env.attn_policy == "qtp":
+            q_tp = _div(H, ms)
+            kv_tp = _div(K, ms)
+            if leaf == "wq":
+                return lead([F, m, None]) if q_tp else lead([F, None, None])
+            if leaf in ("wk", "wv"):
+                return lead([F, m, None]) if kv_tp else lead([F, None, None])
+            if leaf == "wo":
+                return lead([m, None, F]) if q_tp else lead([None, None, F])
+            if leaf == "bq":
+                return lead([m, None]) if q_tp else P()
+            if leaf in ("bk", "bv"):
+                return lead([m, None]) if kv_tp else P()
+            return P()
+        head_tp = _div(H, ms) and _div(K, ms)
+        hd_tp = _div(hd, ms)
+        if leaf == "wq":
+            if head_tp:
+                return lead([F, m, None])
+            return lead([F, None, m]) if hd_tp else lead([F, None, None])
+        if leaf in ("wk", "wv"):
+            if head_tp:
+                return lead([F, m, None])
+            return lead([F, None, m]) if hd_tp else lead([F, None, None])
+        if leaf == "wo":
+            if head_tp:
+                return lead([m, None, F])
+            return lead([None, m, F]) if hd_tp else lead([None, None, F])
+        if leaf in ("bq", "bk", "bv"):
+            if head_tp:
+                return lead([m, None])
+            return lead([None, m]) if hd_tp else P()
+        return P()                                    # q_norm/k_norm scales
+
+    # ---- dense MLP ----
+    if owner == "mlp":
+        if leaf in ("wi", "wg"):
+            return lead([F, m]) if _div(shape[-1], ms) else lead([F, None])
+        if leaf == "wd":
+            return lead([m, F]) if _div(shape[-2], ms) else lead([None, F])
+
+    # ---- MoE ----
+    if owner == "moe":
+        E = cfg.moe_experts
+        etp = _div(E, ms)
+        if leaf == "router":
+            return lead([F, None])
+        if leaf in ("wi", "wg"):
+            return lead([m, F, None]) if etp else lead([None, F, None])
+        if leaf == "wd":
+            return lead([m, None, F]) if etp else lead([None, None, F])
+
+    # ---- Mamba2 (baseline: fsdp only; see §Perf for the TP variant) ----
+    if owner == "mamba":
+        if leaf == "in_proj":
+            return lead([F, None])
+        if leaf == "out_proj":
+            return lead([None, F])
+        return P()
+
+    # ---- xLSTM ----
+    if owner == "mlstm":
+        if leaf == "w_up":
+            return lead([F, m]) if _div(shape[-1], ms) else lead([F, None])
+        if leaf in ("wq", "wk", "wv"):
+            return lead([F, m]) if _div(shape[-1], ms) else lead([F, None])
+        if leaf == "w_down":
+            return lead([m, F]) if _div(shape[-2], ms) else lead([None, F])
+        return P()
+    if owner == "slstm":
+        return P()
+
+    return P()       # norms, biases, scalars
+
+
+def params_shardings(cfg: ArchConfig, params_shapes, env: AxisEnv):
+    """params_shapes: pytree of ShapeDtypeStruct (jax.eval_shape output)."""
+    from repro.core.descriptor import flatten_with_names
+    names, paths, leaves = flatten_with_names(params_shapes)
+    specs = [param_pspec(n, l.shape, cfg, env) for n, l in zip(names, leaves)]
+    flat, treedef = jax.tree_util.tree_flatten(params_shapes)
+    shardings = [NamedSharding(env.mesh, s) for s in specs]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+# ---------------------------------------------------------------------------
+# activations / inputs
+# ---------------------------------------------------------------------------
+
+
+def batch_pspec(batch: int, env: AxisEnv) -> P:
+    if _div(batch, env.dpsize):
+        return P(env.dp)
+    if "data" in env.dp and _div(batch, env.mesh.shape["data"]):
+        return P("data")
+    return P()
+
+
+def token_sharding(cfg: ArchConfig, batch: int, env: AxisEnv):
+    return NamedSharding(env.mesh, batch_pspec(batch, env))
+
+
+def cache_pspec(path: str, shape, cfg: ArchConfig, env: AxisEnv, batch: int) -> P:
+    """KV / SSM cache leaves. Leading axis is the stacked repeat axis.
+
+    Attention caches: (R, B, S, K, hd); SSM: (R, B, H, P, N) etc.
+    Prefer batch over dp; for batch-1 long-context shard the seq axis."""
+    nd = len(shape)
+    leaf = path.split("/")[-1]
+    bspec = batch_pspec(batch, env)
+    if leaf in ("k", "v") and nd >= 4:
+        pads = [None] * nd
+        if bspec != P():
+            pads[1] = bspec[0] if len(bspec) else None
+        else:
+            # sequence-parallel cache for unshardable batch
+            if _div(shape[2], env.dpsize):
+                pads[2] = env.dp
+        K, hd = shape[-2], shape[-1]
+        if _div(K, env.msize):
+            pads[-2] = env.model
+        elif _div(hd, env.msize):
+            pads[-1] = env.model
+        return P(*pads)
+    # recurrent states: batch over dp if divisible, else replicate
+    pads = [None] * nd
+    if nd >= 2 and bspec != P():
+        pads[1] = bspec[0] if len(bspec) else None
+    return P(*pads)
+
+
+def cache_shardings(cfg: ArchConfig, cache_shapes, env: AxisEnv, batch: int):
+    from repro.core.descriptor import flatten_with_names
+    names, paths, leaves = flatten_with_names(cache_shapes)
+    specs = [cache_pspec(n, l.shape, cfg, env, batch) for n, l in zip(names, leaves)]
+    flat, treedef = jax.tree_util.tree_flatten(cache_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [NamedSharding(env.mesh, s) for s in specs])
+
+
+def opt_state_shardings(param_sh, count_sharding=None):
+    """m/v mirror params; count is replicated."""
+    import jax
+    rep = count_sharding
+    return {
+        "m": param_sh,
+        "v": param_sh,
+        "count": rep,
+    }

@@ -1,0 +1,53 @@
+"""cow_scatter Pallas TPU kernel — the COW commit path.
+
+Writes freshly-COW'd pages into their allocated pool frames in place
+(input/output aliasing), with the frame ids scalar-prefetched so the output
+BlockSpec index_map routes each page to its frame.  Inverse index map of
+page_gather; frames not addressed by `page_ids` are untouched (aliased).
+
+`page_ids` must be unique (each dirty page gets a fresh frame from the
+allocator, so duplicates cannot occur in the fork runtime).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _scatter_kernel(pt_ref, pages_ref, frames_ref, out_ref):
+    out_ref[...] = pages_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def cow_scatter(frames, page_ids, pages, *, interpret: bool = True):
+    """frames: (F, E) pool; page_ids: (n,) int32 unique; pages: (n, E)."""
+    F, E = frames.shape
+    assert E % LANE == 0, f"page_elems must be lane-aligned, got {E}"
+    R = E // LANE
+    n = page_ids.shape[0]
+    src = pages.reshape(n, R, LANE).astype(frames.dtype)
+    dst = frames.reshape(F, R, LANE)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, R, LANE), lambda i, pt: (i, 0, 0)),      # pages
+            pl.BlockSpec((1, R, LANE), lambda i, pt: (pt[i], 0, 0)),  # frames
+        ],
+        out_specs=pl.BlockSpec((1, R, LANE), lambda i, pt: (pt[i], 0, 0)),
+    )
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((F, R, LANE), frames.dtype),
+        input_output_aliases={2: 0},      # alias frames input -> output
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), src, dst)
+    return out.reshape(F, E)

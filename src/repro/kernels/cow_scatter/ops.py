@@ -1,0 +1,19 @@
+"""Public wrapper for cow_scatter."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cow_scatter.kernel import cow_scatter as _kernel
+from repro.kernels.cow_scatter.ref import cow_scatter_ref
+
+
+def cow_scatter(frames, page_ids, pages, *, backend: str = "auto"):
+    """Commit COW pages into pool frames. page_ids must be unique."""
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    if backend == "ref":
+        return cow_scatter_ref(frames, page_ids, pages)
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "kernel" or (backend == "auto" and on_tpu):
+        return _kernel(frames, page_ids, pages, interpret=not on_tpu)
+    return cow_scatter_ref(frames, page_ids, pages)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for cow_scatter."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cow_scatter_ref(frames, page_ids, pages):
+    """frames: (F, E); page_ids: (n,) unique int32; pages: (n, E).
+    Returns frames with the given pages written (COW commit)."""
+    return frames.at[page_ids].set(pages.astype(frames.dtype))

@@ -1,0 +1,51 @@
+"""page_gather Pallas TPU kernel — the MITOSIS fault handler's data plane.
+
+The page table lives in SMEM via scalar prefetch (PrefetchScalarGridSpec),
+so the BlockSpec index_map plays the role of the PTE walk: grid step i
+copies pool frame pt[i] into output slot i, HBM->VMEM->HBM, one page per
+grid step.  On real hardware the src pool can be a remote pod's HBM via
+RDMA (`pltpu.make_async_remote_copy`); the on-chip structure is identical.
+
+Pages are viewed as (rows, 128) tiles: 128-lane alignment is mandatory on
+TPU, and page_elems is a multiple of 128 by construction (memory/pool.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANE = 128
+
+
+def _copy_kernel(pt_ref, src_ref, out_ref):
+    out_ref[...] = src_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def page_gather(frames, page_ids, *, interpret: bool = True):
+    """frames: (F, page_elems); page_ids: (n,) int32 -> (n, page_elems)."""
+    F, E = frames.shape
+    assert E % LANE == 0, f"page_elems must be lane-aligned, got {E}"
+    R = E // LANE
+    n = page_ids.shape[0]
+    src = frames.reshape(F, R, LANE)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, R, LANE), lambda i, pt: (pt[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, LANE), lambda i, pt: (i, 0, 0)),
+    )
+    out = pl.pallas_call(
+        _copy_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n, R, LANE), frames.dtype),
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), src)
+    return out.reshape(n, E)

@@ -1,0 +1,26 @@
+"""jit'd public wrapper for page_gather with shape/dtype checking and a
+backend switch (TPU kernel / interpret-mode validation / jnp fallback)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.page_gather.kernel import page_gather as _kernel
+from repro.kernels.page_gather.ref import page_gather_ref
+
+
+def page_gather(frames, page_ids, *, backend: str = "auto"):
+    """Gather pool frames by page id.
+
+    backend: "auto" (kernel on TPU, jnp elsewhere), "kernel" (pallas,
+    interpret off-TPU), "ref" (pure jnp oracle).
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    if frames.ndim != 2:
+        raise ValueError(f"frames must be (F, page_elems), got {frames.shape}")
+    if backend == "ref":
+        return page_gather_ref(frames, page_ids)
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "kernel" or (backend == "auto" and on_tpu):
+        return _kernel(frames, page_ids, interpret=not on_tpu)
+    return page_gather_ref(frames, page_ids)

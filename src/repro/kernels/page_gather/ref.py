@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for page_gather."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def page_gather_ref(frames, page_ids):
+    """frames: (F, page_elems); page_ids: (n,) int32 -> (n, page_elems)."""
+    return jnp.take(frames, page_ids, axis=0)

@@ -1,0 +1,34 @@
+"""Public wrapper for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+def paged_attention(q, kv_pages_k, kv_pages_v, page_table, lengths, *,
+                    v_page_table=None, starts=None, backend: str = "auto"):
+    """Decode attention over paged KV (GQA).
+
+    q: (B, K, G, hd) — G = query heads per kv head.
+    kv_pages_*: (F, Tp, K, hd) pool frames; page_table: (B, P); lengths: (B,);
+    starts: optional (B,) lower bound (sliding windows).
+    backend: "auto" | "kernel" | "ref".
+    """
+    q = jnp.asarray(q)
+    if q.ndim != 4:
+        raise ValueError(f"q must be (B,K,G,hd), got {q.shape}")
+    if kv_pages_k.shape != kv_pages_v.shape:
+        raise ValueError("k/v page pools must match")
+    if backend == "ref":
+        return paged_attention_ref(q, kv_pages_k, kv_pages_v, page_table,
+                                   lengths, starts, v_page_table)
+    on_tpu = jax.default_backend() == "tpu"
+    if backend == "kernel" or (backend == "auto" and on_tpu):
+        return _kernel(q, kv_pages_k, kv_pages_v, page_table, lengths,
+                       v_page_table=v_page_table, starts=starts,
+                       interpret=not on_tpu)
+    return paged_attention_ref(q, kv_pages_k, kv_pages_v, page_table,
+                               lengths, starts, v_page_table)

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count at first init.
+
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, get_arch, shape_applicable
+from repro.distributed import hlo_analysis
+from repro.distributed.roofline import HBM_PER_CHIP, roofline
+from repro.distributed.sharding import (batch_pspec, cache_shardings,
+                                        make_axis_env, params_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.models import flops as flops_mod
+from repro.models import lm
+from repro.training.optimizer import init_opt_state
+from repro.training.train_step import (TrainConfig, make_serve_decode,
+                                       make_serve_prefill, make_train_step)
+
+ARCHS = [
+    "stablelm-3b", "gemma3-1b", "granite-34b", "qwen2-7b", "zamba2-2.7b",
+    "kimi-k2-1t-a32b", "moonshot-v1-16b-a3b", "musicgen-large", "xlstm-1.3b",
+    "chameleon-34b",
+]
+
+OUT_DIR = os.environ.get("DRYRUN_OUT", "artifacts/dryrun")
+
+
+def _sds(tree, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def _tok_shape(cfg: ArchConfig, B: int, S: int):
+    if cfg.num_codebooks > 1:
+        return (B, S, cfg.num_codebooks)
+    return (B, S)
+
+
+def input_specs(arch: str, shape_name: str, multi_pod: bool = False,
+                opts: dict = None):
+    """ShapeDtypeStruct stand-ins (weak-type-correct, sharded, no alloc) for
+    every input of the lowered step, plus the step callable itself.
+
+    `opts` — hillclimb levers (EXPERIMENTS.md §Perf):
+      tp_only_params : replicate params over data (serving sharding)
+      remat          : none|full|dots
+      exact_causal   : python-unrolled exact causal KV slices
+      grad_dtype     : float32|bfloat16 (compressed grad collectives)
+      microbatches, q_chunk, xent_chunk : ints
+      arch overrides : any ArchConfig field, e.g. moe_capacity_factor
+    """
+    opts = dict(opts or {})
+    cfg = get_arch(arch)
+    arch_fields = {f.name for f in __import__("dataclasses").fields(cfg)}
+    arch_over = {k: v for k, v in opts.items() if k in arch_fields}
+    if arch_over:
+        import dataclasses as _dc
+        cfg = _dc.replace(cfg, **arch_over)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    env = make_axis_env(mesh,
+                        attn_policy=opts.get("attn_policy", "v1"),
+                        moe_impl=opts.get("moe_impl", "gspmd"),
+                        mamba_tp=bool(opts.get("mamba_tp", False)))
+    B, S = shape.global_batch, shape.seq_len
+    key = jax.random.PRNGKey(0)
+
+    p_shapes = jax.eval_shape(functools.partial(lm.init_params, cfg=cfg), key)
+    if opts.get("tp_only_params") and shape.step != "train":
+        import dataclasses as _dc
+        p_env = _dc.replace(env, fsdp=())
+    else:
+        p_env = env
+    p_sh = params_shardings(cfg, p_shapes, p_env)
+    params = _sds(p_shapes, p_sh)
+
+    if shape.step == "train":
+        mb = int(opts.get("microbatches", cfg.microbatches))
+        while mb > 1 and (B // mb) % env.dpsize != 0:
+            mb //= 2
+        mb = max(1, min(mb, B // env.dpsize))
+        tcfg = TrainConfig(microbatches=mb,
+                           remat=opts.get("remat"),
+                           grad_dtype=opts.get("grad_dtype", "float32"),
+                           q_chunk=int(opts.get("q_chunk", 1024)),
+                           exact_causal=bool(opts.get("exact_causal", False)),
+                           xent_chunk=int(opts.get("xent_chunk", 512)))
+        step_fn = make_train_step(cfg, tcfg)
+        o_shapes = jax.eval_shape(init_opt_state, p_shapes)
+        o_sh = {"m": p_sh, "v": p_sh,
+                "count": jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())}
+        opt = _sds(o_shapes, o_sh)
+        tok_sh = jax.sharding.NamedSharding(mesh, batch_pspec(B, env))
+        tokens = jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), jnp.int32, sharding=tok_sh)
+        labels = jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), jnp.int32, sharding=tok_sh)
+        return dict(step="train", fn=step_fn, args=(params, opt, tokens, labels),
+                    mesh=mesh, env=env, cfg=cfg, shape=shape, donate=(0, 1),
+                    meta={"microbatches": mb})
+
+    if shape.step == "prefill":
+        step_fn = make_serve_prefill(cfg, cache_len=S,
+                                     q_chunk=int(opts.get("q_chunk", 1024)))
+        tok_sh = jax.sharding.NamedSharding(mesh, batch_pspec(B, env))
+        tokens = jax.ShapeDtypeStruct(_tok_shape(cfg, B, S), jnp.int32, sharding=tok_sh)
+        return dict(step="prefill", fn=step_fn, args=(params, tokens),
+                    mesh=mesh, env=env, cfg=cfg, shape=shape, donate=(),
+                    meta={})
+
+    # decode: one new token against a KV cache of S
+    step_fn = make_serve_decode(cfg)
+    c_shapes = jax.eval_shape(
+        functools.partial(lm.init_cache, cfg, B, S, dtype=jnp.bfloat16))
+    c_sh = cache_shardings(cfg, c_shapes, env, B)
+    caches = _sds(c_shapes, c_sh)
+    tok_sh = jax.sharding.NamedSharding(mesh, batch_pspec(B, env))
+    tshape = (B, cfg.num_codebooks) if cfg.num_codebooks > 1 else (B,)
+    token = jax.ShapeDtypeStruct(tshape, jnp.int32, sharding=tok_sh)
+    pos = jax.ShapeDtypeStruct((B,), jnp.int32, sharding=tok_sh)
+    return dict(step="decode", fn=step_fn, args=(params, caches, token, pos),
+                mesh=mesh, env=env, cfg=cfg, shape=shape, donate=(1,),
+                meta={})
+
+
+def _mem_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    out = {}
+    for k in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+              "output_size_in_bytes", "temp_size_in_bytes",
+              "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+              "host_argument_size_in_bytes", "host_output_size_in_bytes",
+              "host_temp_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if not out:
+        out["repr"] = str(ma)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             opts: dict = None, tag: str = "") -> dict:
+    cfg = get_arch(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_tag, "tag": tag,
+            "opts": opts or {}}
+    if not ok:
+        cell.update(status="skipped", reason=why)
+        return cell
+
+    t0 = time.time()
+    spec = input_specs(arch, shape_name, multi_pod, opts)
+    fn = jax.jit(spec["fn"], donate_argnums=spec["donate"])
+    from repro.distributed import ctx as _ctx
+    with _ctx.use_env(spec["env"]):
+        lowered = fn.lower(*spec["args"])
+    t_lower = time.time() - t0
+
+    t1 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t1
+
+    chips = int(np.prod(list(spec["mesh"].shape.values())))
+    ca = compiled.cost_analysis() or {}
+
+    # Loop-aware extraction from the partitioned module (per-device), then
+    # normalized to global. XLA's own cost_analysis counts while bodies once;
+    # we keep it for reference only.
+    hlo = compiled.as_text()
+    an = hlo_analysis.analyze(hlo)
+    flops_dev = an["dot_flops"]
+    bytes_dev = an["traffic_bytes"]
+    coll = an["collectives"]
+    coll_dev = hlo_analysis.total_collective_bytes(coll)
+    flops_global = flops_dev * chips
+    bytes_global = bytes_dev * chips
+    rl = roofline(flops_global, bytes_global, coll_dev * chips, chips)
+
+    mf = flops_mod.model_flops(spec["cfg"], shape)
+    mem = _mem_analysis_dict(compiled)
+    arg_b = mem.get("argument_size_in_bytes", 0)
+    tmp_b = mem.get("temp_size_in_bytes", 0)
+    cell.update(
+        status="ok",
+        chips=chips,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        cost_analysis={"flops_per_device": flops_dev,
+                       "bytes_per_device": bytes_dev,
+                       "xla_flops_raw": float(ca.get("flops", 0.0)),
+                       "xla_bytes_raw": float(ca.get("bytes accessed", 0.0))},
+        memory_analysis=mem,
+        bytes_per_device_total=arg_b + tmp_b,
+        fits_hbm=bool((arg_b + tmp_b) <= HBM_PER_CHIP) if (arg_b or tmp_b) else None,
+        collectives=coll,
+        collective_bytes_per_device=coll_dev,
+        roofline=rl.to_dict(),
+        model_flops=mf,
+        useful_flops_ratio=(mf / flops_global) if flops_global else None,
+        roofline_fraction=rl.fraction_of_roofline(mf),
+        hlo_bytes=len(hlo),
+        meta=spec["meta"],
+    )
+    return cell
+
+
+def cell_path(arch, shape_name, multi_pod, tag=""):
+    mesh_tag = "pod512" if multi_pod else "pod256"
+    t = f"--{tag}" if tag else ""
+    return os.path.join(OUT_DIR, f"{arch}--{shape_name}--{mesh_tag}{t}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--opt", action="append", default=[],
+                    help="hillclimb lever key=value (repeatable)")
+    args = ap.parse_args()
+
+    opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        try:
+            import ast
+            opts[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            opts[k] = v
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    cells = []
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                cells.append((a, s, mp))
+
+    for a, s, mp in cells:
+        path = cell_path(a, s, mp, args.tag)
+        if args.skip_done and os.path.exists(path):
+            print(f"[skip] {path}")
+            continue
+        print(f"[dryrun] {a} x {s} x {'pod512' if mp else 'pod256'} "
+              f"{opts or ''}...", flush=True)
+        try:
+            res = run_cell(a, s, mp, opts=opts, tag=args.tag)
+        except Exception as e:
+            res = {"arch": a, "shape": s,
+                   "mesh": "pod512" if mp else "pod256", "tag": args.tag,
+                   "status": "error", "error": repr(e),
+                   "trace": traceback.format_exc()[-4000:]}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        print(f"  -> {res['status']}"
+              + (f" compile={res.get('compile_s')}s dominant="
+                 f"{res.get('roofline', {}).get('dominant')}"
+                 if res["status"] == "ok" else f" {res.get('error','')[:200]}"),
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Tensor <-> page packing."""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_pages(size: int, page_elems: int) -> int:
+    return max(1, math.ceil(size / page_elems))
+
+
+def to_pages(arr, page_elems: int):
+    """Flatten + pad a tensor into (n_pages, page_elems)."""
+    flat = jnp.ravel(arr)
+    n = num_pages(flat.size, page_elems)
+    pad = n * page_elems - flat.size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n, page_elems)
+
+
+def from_pages(pages, shape, dtype):
+    size = int(np.prod(shape)) if shape else 1
+    return jnp.ravel(pages)[:size].reshape(shape).astype(dtype)

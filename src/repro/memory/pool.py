@@ -1,0 +1,115 @@
+"""Paged memory pools — the "physical memory" of a node.
+
+A ``PagePool`` holds, per dtype, a single device-resident frames array of
+shape (num_frames, PAGE_ELEMS).  Tensors are packed into pages
+(memory/paging.py); page tables (core/pagetable.py) map tensor pages to
+frames.  This is the analogue of the parent's physical memory that MITOSIS
+children read over RDMA.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PAGE_ELEMS = 32768  # elements per page (128 KiB fp32 / 64 KiB bf16)
+
+
+class OutOfFrames(RuntimeError):
+    pass
+
+
+class PagePool:
+    """Frames are held as a host numpy array (in-place writes — this is the
+    node's simulated physical memory); reads hand out jnp arrays.  On real
+    TPU the pool is a device buffer updated by the cow_scatter kernel."""
+
+    def __init__(self, page_elems: int = PAGE_ELEMS, grow_frames: int = 256):
+        self.page_elems = page_elems
+        self.grow_frames = grow_frames
+        self._frames: Dict[str, np.ndarray] = {}    # dtype name -> (F, page_elems)
+        self._free: Dict[str, List[int]] = {}
+        self._allocated: Dict[str, set] = {}
+
+    # -- bookkeeping ---------------------------------------------------------
+
+    def _dt(self, dtype) -> str:
+        return jnp.dtype(dtype).name
+
+    def _np_dtype(self, dt: str):
+        # numpy has no bfloat16: store via jax's extended dtype view
+        return jnp.dtype(dt)
+
+    def _ensure_capacity(self, dt: str, n: int):
+        if dt not in self._frames:
+            self._frames[dt] = np.zeros((0, self.page_elems),
+                                        dtype=self._np_dtype(dt))
+            self._free[dt] = []
+            self._allocated[dt] = set()
+        while len(self._free[dt]) < n:
+            old = self._frames[dt]
+            grow = max(self.grow_frames, n - len(self._free[dt]))
+            self._frames[dt] = np.concatenate(
+                [old, np.zeros((grow, self.page_elems),
+                               dtype=old.dtype)])
+            self._free[dt].extend(range(old.shape[0], old.shape[0] + grow))
+
+    # -- alloc/free ----------------------------------------------------------
+
+    def alloc(self, dtype, n: int) -> np.ndarray:
+        dt = self._dt(dtype)
+        self._ensure_capacity(dt, n)
+        frames = [self._free[dt].pop() for _ in range(n)]
+        self._allocated[dt].update(frames)
+        return np.asarray(frames, np.int32)
+
+    def free(self, dtype, frames) -> None:
+        dt = self._dt(dtype)
+        for f in np.asarray(frames).tolist():
+            if f in self._allocated[dt]:
+                self._allocated[dt].discard(f)
+                self._free[dt].append(f)
+
+    def num_allocated(self, dtype=None) -> int:
+        if dtype is not None:
+            return len(self._allocated.get(self._dt(dtype), ()))
+        return sum(len(v) for v in self._allocated.values())
+
+    def bytes_allocated(self) -> int:
+        tot = 0
+        for dt, alloc in self._allocated.items():
+            tot += len(alloc) * self.page_elems * jnp.dtype(dt).itemsize
+        return tot
+
+    def bytes_reserved(self) -> int:
+        return sum(a.shape[0] * self.page_elems * jnp.dtype(dt).itemsize
+                   for dt, a in self._frames.items())
+
+    # -- data plane ----------------------------------------------------------
+
+    def write_pages(self, dtype, frames, pages) -> None:
+        dt = self._dt(dtype)
+        idx = np.asarray(frames, np.int32)
+        self._frames[dt][idx] = np.asarray(
+            pages.astype(dt) if hasattr(pages, "astype") else pages)
+
+    def write_rows(self, dtype, frames, slots, rows, row_elems: int) -> None:
+        """In-place row update within pages: frames (B,), slots (B,),
+        rows (B, row_elems). Used by the serving engine's token appends."""
+        dt = self._dt(dtype)
+        F = self._frames[dt].shape[0]
+        view = self._frames[dt].reshape(F, -1, row_elems)
+        view[np.asarray(frames, np.int32), np.asarray(slots, np.int32)] = \
+            np.asarray(rows.astype(dt) if hasattr(rows, "astype") else rows)
+
+    def read_pages(self, dtype, frames) -> jax.Array:
+        """Gather frames -> (n, page_elems). The local-read data plane."""
+        dt = self._dt(dtype)
+        idx = np.asarray(frames, np.int32)
+        return jnp.asarray(self._frames[dt][idx])
+
+    def frames_array(self, dtype) -> jax.Array:
+        """Expose raw physical frames (what the RNIC reads)."""
+        return jnp.asarray(self._frames[self._dt(dtype)])

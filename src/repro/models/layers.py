@@ -1,0 +1,411 @@
+"""Shared neural-net layers: norms, RoPE, attention (train/prefill/decode,
+global & sliding-window, q-chunked), MLPs, chunked cross-entropy.
+
+Everything is pure-functional: params are plain dict pytrees; all control
+flow that must stay compact under `lax.scan` uses jnp/lax only.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.ctx import constrain
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def ninit(key, shape, scale=None, dtype=jnp.float32, fan_in_axis=None):
+    """Truncated-normal init; default scale 1/sqrt(fan_in)."""
+    if scale is None:
+        fan_in = shape[fan_in_axis] if fan_in_axis is not None else shape[0]
+        scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def zinit(shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, scale, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def init_rms_norm(d):
+    return {"scale": zinit((d,))}
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d_model, d_ff, gated):
+    ks = jax.random.split(key, 3)
+    p = {"wi": ninit(ks[0], (d_model, d_ff)), "wd": ninit(ks[1], (d_ff, d_model))}
+    if gated:
+        p["wg"] = ninit(ks[2], (d_model, d_ff))
+    return p
+
+
+def mlp(params, x, gated):
+    dt = x.dtype
+    h = x @ params["wi"].astype(dt)
+    if gated:
+        h = jax.nn.silu(x @ params["wg"].astype(dt)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ params["wd"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg, spec):
+    d, h, k, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": ninit(ks[0], (d, h, hd)),
+        "wk": ninit(ks[1], (d, k, hd)),
+        "wv": ninit(ks[2], (d, k, hd)),
+        "wo": ninit(ks[3], (h, hd, d), fan_in_axis=0),
+    }
+    if spec.qkv_bias:
+        p["bq"], p["bk"], p["bv"] = zinit((h, hd)), zinit((k, hd)), zinit((k, hd))
+    if spec.qk_norm:
+        p["q_norm"] = init_rms_norm(hd)
+        p["k_norm"] = init_rms_norm(hd)
+    return p
+
+
+def _project_qkv(params, x, spec, cfg, positions):
+    dt = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt))
+    if spec.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"]["scale"], cfg.norm_eps)
+    if spec.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # Pin batch to dp and heads (or head_dim) to model — without this GSPMD
+    # replicates the batch inside the q-chunk scan (3x FLOP inflation
+    # observed in the dry-run).  Mirror the weight policy: head-TP only if
+    # both H and K divide the model axis, else shard head_dim.
+    from repro.distributed.ctx import get_env
+    env = get_env()
+    if env is not None:
+        H, K = q.shape[2], k.shape[2]
+        ms = env.msize
+        if getattr(env, "attn_policy", "v1") == "qtp":
+            # Q heads over model whenever divisible; K/V replicated if their
+            # head count doesn't divide — no sharded contraction in scores.
+            q = constrain(q, ("dp", None, "model", None))
+            kv_dims = ("dp", None, "model" if K % ms == 0 else None, None)
+            k = constrain(k, kv_dims)
+            v = constrain(v, kv_dims)
+        else:
+            if H % ms == 0 and K % ms == 0:
+                dims = ("dp", None, "model", None)
+            else:
+                dims = ("dp", None, None, "model")
+            q = constrain(q, dims)
+            k = constrain(k, dims)
+            v = constrain(v, dims)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,H,hd) k,v: (B,Sk,K,hd); GQA by head grouping. mask: (B|1,Sq,Sk)."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    q = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k).astype(jnp.float32) * scale
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attention_train(params, x, spec, cfg, positions, q_chunk=1024,
+                    exact_causal_slices=False):
+    """Causal (optionally sliding-window) attention for train/prefill.
+
+    q-chunked with `lax.scan` so the score working set is (B,H,chunk,Skv).
+    Window layers slice only the (window+chunk) KV band — the paper-faithful
+    "touch only what you need" structure applied to attention FLOPs.
+
+    ``exact_causal_slices``: beyond-paper hillclimb mode — python-unrolled
+    q-chunks with [0 : (i+1)*chunk] KV slices, halving global-attention FLOPs
+    at the cost of a larger (unrolled) HLO.
+    """
+    B, S, D = x.shape
+    scale = cfg.head_dim ** -0.5
+    q, k, v = _project_qkv(params, x, spec, cfg, positions)
+
+    if S <= q_chunk:
+        qpos = positions if positions.ndim > 1 else positions[None, :]
+        mask = qpos[:, :, None] >= qpos[:, None, :]
+        if spec.window:
+            mask &= qpos[:, :, None] - qpos[:, None, :] < spec.window
+        out = _sdpa(q, k, v, mask, scale)
+    elif spec.window is not None:
+        out = _window_chunked(q, k, v, spec.window, q_chunk, scale)
+    elif exact_causal_slices:
+        out = _causal_unrolled(q, k, v, q_chunk, scale)
+    else:
+        out = _causal_chunked(q, k, v, q_chunk, scale)
+    dt = x.dtype
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+
+
+def _causal_chunked(q, k, v, c, scale):
+    B, S, H, hd = q.shape
+    nc = S // c
+    qs = q.reshape(B, nc, c, H, hd).transpose(1, 0, 2, 3, 4)  # (nc,B,c,H,hd)
+
+    def step(_, qi_i):
+        qi, i = qi_i
+        qpos = i * c + jnp.arange(c)
+        kpos = jnp.arange(S)
+        mask = (qpos[:, None] >= kpos[None, :])[None]
+        return None, _sdpa(qi, k, v, mask, scale)
+
+    _, out = jax.lax.scan(step, None, (qs, jnp.arange(nc)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def _causal_unrolled(q, k, v, c, scale):
+    B, S, H, hd = q.shape
+    nc = S // c
+    outs = []
+    for i in range(nc):
+        qi = q[:, i * c:(i + 1) * c]
+        kv_end = (i + 1) * c
+        ki, vi = k[:, :kv_end], v[:, :kv_end]
+        qpos = i * c + jnp.arange(c)
+        mask = (qpos[:, None] >= jnp.arange(kv_end)[None, :])[None]
+        outs.append(_sdpa(qi, ki, vi, mask, scale))
+    return jnp.concatenate(outs, axis=1)
+
+
+def _window_chunked(q, k, v, window, c, scale):
+    """Front-pad KV by `window` so each q-chunk reads a fixed (window+c) band."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    w = ((window + c - 1) // c) * c        # pad window to a chunk multiple
+    kp = jnp.pad(k, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (w, 0), (0, 0), (0, 0)))
+    nc = S // c
+    qs = q.reshape(B, nc, c, H, hd).transpose(1, 0, 2, 3, 4)
+
+    def step(_, qi_i):
+        qi, i = qi_i
+        ki = jax.lax.dynamic_slice_in_dim(kp, i * c, w + c, axis=1)
+        vi = jax.lax.dynamic_slice_in_dim(vp, i * c, w + c, axis=1)
+        qpos = i * c + jnp.arange(c)
+        kpos = i * c - w + jnp.arange(w + c)
+        mask = ((qpos[:, None] >= kpos[None, :])
+                & (qpos[:, None] - kpos[None, :] < window)
+                & (kpos[None, :] >= 0))[None]
+        return None, _sdpa(qi, ki, vi, mask, scale)
+
+    _, out = jax.lax.scan(step, None, (qs, jnp.arange(nc)))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+# --- prefill (returns cache) & decode -------------------------------------
+
+
+def attention_prefill(params, x, spec, cfg, positions, cache_len, q_chunk=1024):
+    """Same as train, but also returns the (k,v) cache of size cache_len.
+
+    Window layers keep only the last `window` keys (ring layout, slot =
+    pos % window).
+    """
+    B, S, D = x.shape
+    q, k, v = _project_qkv(params, x, spec, cfg, positions)
+    scale = cfg.head_dim ** -0.5
+    if S <= q_chunk:
+        qpos = positions if positions.ndim > 1 else positions[None, :]
+        mask = qpos[:, :, None] >= qpos[:, None, :]
+        if spec.window:
+            mask &= qpos[:, :, None] - qpos[:, None, :] < spec.window
+        out = _sdpa(q, k, v, mask, scale)
+    elif spec.window is not None:
+        out = _window_chunked(q, k, v, spec.window, q_chunk, scale)
+    else:
+        out = _causal_chunked(q, k, v, q_chunk, scale)
+
+    if spec.window is not None:
+        w = min(spec.window, cache_len)
+        # ring layout: entry for absolute position p lives at slot p % w.
+        tail_k, tail_v = k[:, -w:], v[:, -w:]
+        pos_tail = positions[..., -w:] if positions.ndim > 1 else positions[-w:][None]
+        slots = (pos_tail % w).astype(jnp.int32)
+        ck = jnp.zeros((B, w) + k.shape[2:], k.dtype)
+        cv = jnp.zeros((B, w) + v.shape[2:], v.dtype)
+        bidx = jnp.arange(B)[:, None]
+        ck = ck.at[bidx, slots].set(tail_k)
+        cv = cv.at[bidx, slots].set(tail_v)
+        cache = {"k": ck, "v": cv}
+    else:
+        pad = cache_len - S
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+        }
+    dt = x.dtype
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt)), cache
+
+
+def attention_decode(params, x, spec, cfg, cache, pos):
+    """One-token decode. x: (B,1,D); pos: (B,) absolute positions.
+
+    Global layers: cache (B,Smax,K,hd), write at pos, mask j<=pos.
+    Window layers: ring cache (B,w,K,hd), write at pos%w, mask by recency.
+    """
+    B = x.shape[0]
+    q, k, v = _project_qkv(params, x, spec, cfg, pos[:, None])
+    scale = cfg.head_dim ** -0.5
+    ck, cv = cache["k"], cache["v"]
+    bidx = jnp.arange(B)
+    if spec.window is not None:
+        w = ck.shape[1]
+        slot = (pos % w).astype(jnp.int32)
+        ck = ck.at[bidx, slot].set(k[:, 0])
+        cv = cv.at[bidx, slot].set(v[:, 0])
+        # slot s holds abs position: the largest p' <= pos with p' % w == s.
+        valid = jnp.arange(w)[None, :] <= jnp.minimum(pos, w - 1)[:, None]
+    else:
+        Smax = ck.shape[1]
+        ck = ck.at[bidx, pos].set(k[:, 0])
+        cv = cv.at[bidx, pos].set(v[:, 0])
+        valid = jnp.arange(Smax)[None, :] <= pos[:, None]
+    out = _sdpa(q, ck, cv, valid[:, None, :], scale)
+    dt = x.dtype
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, {"k": ck, "v": cv}
+
+
+def init_attn_cache(cfg, spec, batch, cache_len, dtype):
+    w = min(spec.window, cache_len) if spec.window is not None else cache_len
+    shape = (batch, w, cfg.num_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, cfg):
+    ks = jax.random.split(key, 2)
+    cb = cfg.num_codebooks
+    shape = (cb, cfg.vocab_size, cfg.d_model) if cb > 1 else (cfg.vocab_size, cfg.d_model)
+    p = {"tok": ninit(ks[0], shape, scale=0.02, fan_in_axis=-1)}
+    if not cfg.tie_embeddings:
+        oshape = (cfg.d_model, cb * cfg.vocab_size) if cb > 1 else (cfg.d_model, cfg.vocab_size)
+        p["out"] = ninit(ks[1], oshape)
+    return p
+
+
+def embed_tokens(params, cfg, tokens, dtype):
+    """tokens: (B,S) or (B,S,CB) for multi-codebook archs."""
+    tok = params["tok"].astype(dtype)
+    if cfg.num_codebooks > 1:
+        # sum of per-codebook embeddings
+        out = 0.0
+        for c in range(cfg.num_codebooks):
+            out = out + jnp.take(tok[c], tokens[..., c], axis=0)
+        return out
+    return jnp.take(tok, tokens, axis=0)
+
+
+def output_logits(params, cfg, h):
+    """h: (B,S,D) -> logits (B,S,V) or (B,S,CB,V)."""
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        tok = params["tok"].astype(dt)
+        if cfg.num_codebooks > 1:
+            return jnp.einsum("bsd,cvd->bscv", h, tok)
+        return jnp.einsum("bsd,vd->bsv", h, tok)
+    out = params["out"].astype(dt)
+    logits = h @ out
+    if cfg.num_codebooks > 1:
+        B, S = h.shape[:2]
+        return logits.reshape(B, S, cfg.num_codebooks, cfg.vocab_size)
+    return logits
+
+
+def chunked_xent(params, cfg, h, labels, chunk=256):
+    """Cross-entropy without materializing (B,S,V) logits: scan over seq
+    chunks, recompute logits in the backward pass (jax.checkpoint)."""
+    B, S, D = h.shape
+    chunk = min(chunk, S)
+    nc = S // chunk
+    rem = S - nc * chunk
+    hs = h[:, :nc * chunk].reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    if cfg.num_codebooks > 1:
+        ls = labels[:, :nc * chunk].reshape(B, nc, chunk, -1).transpose(1, 0, 2, 3)
+    else:
+        ls = labels[:, :nc * chunk].reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_loss(hc, lc):
+        logits = output_logits(params, cfg, hc).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        return jnp.sum(lse - gold)
+
+    def step(acc, xs):
+        hc, lc = xs
+        return acc + chunk_loss(hc, lc), None
+
+    total, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ls))
+    if rem:
+        total = total + chunk_loss(h[:, nc * chunk:], labels[:, nc * chunk:])
+    denom = B * S * (cfg.num_codebooks if cfg.num_codebooks > 1 else 1)
+    return total / denom

@@ -1,0 +1,284 @@
+"""Unified causal LM over the 10-arch zoo.
+
+Layer stacks are (unit pattern) x repeat groups (configs/base.py).  Params of
+each block position in the unit are stacked over `repeat` and applied with
+`lax.scan` — HLO size is depth-independent, which keeps 512-device AOT
+compiles tractable for 61–88 layer models.  Blocks marked ``shared=True``
+(zamba2's attention) hold ONE param set at group level, closed over by the
+scan body; their *caches* are still per-application (stacked), exactly like
+the paper's distinction between shared parent pages (weights) and private
+child state.
+
+API:
+  init_params(key, cfg)
+  forward(params, cfg, tokens)                       -> hidden (B,S,D)
+  loss_fn(params, cfg, tokens, labels)               -> scalar
+  prefill(params, cfg, tokens, cache_len)            -> (last_logits, caches)
+  decode_step(params, cfg, caches, token, pos)       -> (logits, caches)
+  init_cache(cfg, batch, cache_len, dtype)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, AttnSpec, MambaSpec, MLSTMSpec, SLSTMSpec
+from repro.distributed import ctx
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+from repro.models import xlstm as XL
+
+
+# ---------------------------------------------------------------------------
+# per-block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _has_mlp(cfg: ArchConfig, spec) -> bool:
+    return isinstance(spec, AttnSpec) and (cfg.d_ff > 0 or cfg.moe_experts > 0)
+
+
+def init_block(key, cfg, spec):
+    ks = jax.random.split(key, 4)
+    if isinstance(spec, AttnSpec):
+        p = {"norm1": L.init_rms_norm(cfg.d_model),
+             "attn": L.init_attention(ks[0], cfg, spec)}
+        if _has_mlp(cfg, spec):
+            p["norm2"] = L.init_rms_norm(cfg.d_model)
+            if cfg.moe_experts:
+                p["moe"] = MOE.init_moe(ks[1], cfg)
+            else:
+                p["mlp"] = L.init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.mlp_gated)
+        return p
+    if isinstance(spec, MambaSpec):
+        return {"norm1": L.init_rms_norm(cfg.d_model),
+                "mamba": SSM.init_mamba(ks[0], cfg, spec)}
+    if isinstance(spec, MLSTMSpec):
+        return {"norm1": L.init_rms_norm(cfg.d_model),
+                "mlstm": XL.init_mlstm(ks[0], cfg, spec)}
+    if isinstance(spec, SLSTMSpec):
+        return {"norm1": L.init_rms_norm(cfg.d_model),
+                "slstm": XL.init_slstm(ks[0], cfg, spec)}
+    raise TypeError(spec)
+
+
+def apply_block(params, h, cfg, spec, *, mode, positions=None, cache=None,
+                pos=None, cache_len=0, q_chunk=1024, exact_causal=False):
+    """mode: train | prefill | decode. Returns (h, cache_out_or_None)."""
+    eps = cfg.norm_eps
+    hn = L.rms_norm(h, params["norm1"]["scale"], eps)
+    cache_out = None
+
+    if isinstance(spec, AttnSpec):
+        if mode == "train":
+            a = L.attention_train(params["attn"], hn, spec, cfg, positions,
+                                  q_chunk=q_chunk, exact_causal_slices=exact_causal)
+        elif mode == "prefill":
+            a, cache_out = L.attention_prefill(params["attn"], hn, spec, cfg,
+                                               positions, cache_len, q_chunk=q_chunk)
+        else:
+            a, cache_out = L.attention_decode(params["attn"], hn, spec, cfg, cache, pos)
+        h = h + a
+        if _has_mlp(cfg, spec):
+            hn2 = L.rms_norm(h, params["norm2"]["scale"], eps)
+            if cfg.moe_experts:
+                h = h + MOE.moe_mlp(params["moe"], hn2, cfg)
+            else:
+                h = h + L.mlp(params["mlp"], hn2, cfg.mlp_gated)
+        return h, cache_out
+
+    if isinstance(spec, MambaSpec):
+        if mode == "decode":
+            y, cache_out = SSM.mamba_decode(params["mamba"], hn, cfg, spec, cache)
+        elif mode == "prefill":
+            y, cache_out = SSM.mamba_forward(params["mamba"], hn, cfg, spec,
+                                             return_state=True)
+        else:
+            y = SSM.mamba_forward(params["mamba"], hn, cfg, spec)
+        return h + y, cache_out
+
+    if isinstance(spec, MLSTMSpec):
+        if mode == "decode":
+            y, cache_out = XL.mlstm_decode(params["mlstm"], hn, cfg, spec, cache)
+        elif mode == "prefill":
+            y, cache_out = XL.mlstm_forward(params["mlstm"], hn, cfg, spec,
+                                            return_state=True)
+        else:
+            y = XL.mlstm_forward(params["mlstm"], hn, cfg, spec)
+        return h + y, cache_out
+
+    if isinstance(spec, SLSTMSpec):
+        if mode == "decode":
+            y, cache_out = XL.slstm_decode(params["slstm"], hn, cfg, spec, cache)
+        elif mode == "prefill":
+            y, cache_out = XL.slstm_forward(params["slstm"], hn, cfg, spec,
+                                            return_state=True)
+        else:
+            y = XL.slstm_forward(params["slstm"], hn, cfg, spec)
+        return h + y, cache_out
+
+    raise TypeError(spec)
+
+
+def init_block_cache(cfg, spec, batch, cache_len, dtype):
+    if isinstance(spec, AttnSpec):
+        return L.init_attn_cache(cfg, spec, batch, cache_len, dtype)
+    if isinstance(spec, MambaSpec):
+        return SSM.init_mamba_cache(cfg, spec, batch, dtype)
+    if isinstance(spec, MLSTMSpec):
+        return XL.init_mlstm_cache(cfg, spec, batch, dtype)
+    if isinstance(spec, SLSTMSpec):
+        return XL.init_slstm_cache(cfg, spec, batch, dtype)
+    raise TypeError(spec)
+
+
+# ---------------------------------------------------------------------------
+# params / cache init
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ArchConfig):
+    kg = jax.random.split(key, len(cfg.groups) + 2)
+    groups = []
+    for gi, g in enumerate(cfg.groups):
+        kb = jax.random.split(kg[gi], len(g.unit))
+        blocks = []
+        for bi, spec in enumerate(g.unit):
+            if getattr(spec, "shared", False):
+                blocks.append(init_block(kb[bi], cfg, spec))
+            else:
+                bks = jax.random.split(kb[bi], g.repeat)
+                blocks.append(jax.vmap(lambda k, s=spec: init_block(k, cfg, s))(bks))
+        groups.append({"blocks": blocks})
+    params = {
+        "embed": L.init_embed(kg[-2], cfg),
+        "groups": groups,
+        "final_norm": L.init_rms_norm(cfg.d_model),
+    }
+    if cfg.param_dtype != "float32":
+        params = jax.tree.map(lambda x: x.astype(cfg.param_dtype), params)
+    return params
+
+
+def init_cache(cfg: ArchConfig, batch, cache_len, dtype=jnp.bfloat16):
+    groups = []
+    for g in cfg.groups:
+        blocks = []
+        for spec in g.unit:
+            single = init_block_cache(cfg, spec, batch, cache_len, dtype)
+            blocks.append(jax.tree.map(
+                lambda x: jnp.zeros((g.repeat,) + x.shape, x.dtype), single))
+        groups.append({"blocks": blocks})
+    return {"groups": groups}
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def _run_groups(params, cfg, h, *, mode, positions=None, caches=None, pos=None,
+                cache_len=0, q_chunk=1024, exact_causal=False, remat="none"):
+    """Scan each group; returns (h, new_caches_or_None)."""
+    new_groups = []
+    for g, gp, gc in zip(cfg.groups, params["groups"],
+                         (caches["groups"] if caches else [None] * len(cfg.groups))):
+        scanned = tuple(bp for spec, bp in zip(g.unit, gp["blocks"])
+                        if not getattr(spec, "shared", False))
+        cache_xs = tuple(gc["blocks"]) if gc is not None else None
+
+        def unit_fn(h, xs, _g=g, _gp=gp):
+            param_slices, cache_slices, _ = xs
+            si = 0
+            new_caches = []
+            for bi, spec in enumerate(_g.unit):
+                if getattr(spec, "shared", False):
+                    bp = _gp["blocks"][bi]
+                else:
+                    bp = param_slices[si]
+                    si += 1
+                c = cache_slices[bi] if cache_slices is not None else None
+                h, co = apply_block(bp, h, cfg, spec, mode=mode,
+                                    positions=positions, cache=c, pos=pos,
+                                    cache_len=cache_len, q_chunk=q_chunk,
+                                    exact_causal=exact_causal)
+                h = ctx.constrain(h, ("dp", None, None))
+                new_caches.append(co)
+            return h, tuple(new_caches)
+
+        unit_fn = _remat(unit_fn, remat if mode == "train" else "none")
+
+        def scan_body(h, xs):
+            h, cs = unit_fn(h, xs)
+            return h, cs
+
+        xs = (scanned, cache_xs, jnp.arange(g.repeat))
+        if mode == "train":
+            h, _ = jax.lax.scan(lambda hh, x: (unit_fn(hh, x)[0], None), h, xs)
+            new_groups.append(None)
+        else:
+            h, cs = jax.lax.scan(scan_body, h, xs)
+            new_groups.append({"blocks": list(cs)})
+    if mode == "train":
+        return h, None
+    return h, {"groups": new_groups}
+
+
+def forward(params, cfg: ArchConfig, tokens, q_chunk=1024, exact_causal=False,
+            remat: Optional[str] = None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = L.embed_tokens(params["embed"], cfg, tokens, dt)
+    h = ctx.constrain(h, ("dp", None, None))
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, _ = _run_groups(params, cfg, h, mode="train", positions=positions,
+                       q_chunk=q_chunk, exact_causal=exact_causal,
+                       remat=remat if remat is not None else cfg.remat_policy)
+    return L.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+
+
+def loss_fn(params, cfg: ArchConfig, tokens, labels, q_chunk=1024,
+            exact_causal=False, remat=None, xent_chunk=256):
+    h = forward(params, cfg, tokens, q_chunk, exact_causal, remat)
+    return L.chunked_xent(params["embed"], cfg, h, labels, chunk=xent_chunk)
+
+
+def logits_fn(params, cfg: ArchConfig, tokens, **kw):
+    h = forward(params, cfg, tokens, **kw)
+    return L.output_logits(params["embed"], cfg, h)
+
+
+def prefill(params, cfg: ArchConfig, tokens, cache_len, q_chunk=1024):
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = L.embed_tokens(params["embed"], cfg, tokens, dt)
+    S = h.shape[1]
+    positions = jnp.arange(S)[None, :]
+    h, caches = _run_groups(params, cfg, h, mode="prefill", positions=positions,
+                            cache_len=cache_len, q_chunk=q_chunk)
+    h = L.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.output_logits(params["embed"], cfg, h[:, -1:])[:, 0]
+    return logits, caches
+
+
+def decode_step(params, cfg: ArchConfig, caches, token, pos):
+    """token: (B,) int32 (or (B,CB) multi-codebook); pos: (B,) absolute."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    tok = token[:, None] if token.ndim == 1 else token[:, None, :]
+    h = L.embed_tokens(params["embed"], cfg, tok, dt)
+    h, caches = _run_groups(params, cfg, h, mode="decode", caches=caches, pos=pos)
+    h = L.rms_norm(h, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = L.output_logits(params["embed"], cfg, h)[:, 0]
+    return logits, caches

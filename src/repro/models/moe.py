@@ -1,0 +1,176 @@
+"""Top-k token-choice MoE with sort-based dispatch (capacity-dropping).
+
+Baseline formulation is GSPMD-friendly dense einsums over an (E, C, D)
+dispatch buffer; experts shard over the `model` mesh axis (expert
+parallelism), tokens over `data` — XLA inserts the all-to-alls.  A
+shard_map-based explicit-EP variant is the §Perf beyond-paper optimization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.ctx import constrain
+from repro.models.layers import ninit
+
+
+def init_moe(key, cfg):
+    E, D, F = cfg.moe_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": ninit(ks[0], (D, E), scale=0.02),
+        "wi": ninit(ks[1], (E, D, F), fan_in_axis=1),
+        "wd": ninit(ks[2], (E, F, D), fan_in_axis=1),
+    }
+    if cfg.mlp_gated:
+        p["wg"] = ninit(ks[3], (E, D, F), fan_in_axis=1)
+    return p
+
+
+def moe_mlp(params, x, cfg, return_aux=False):
+    """Dispatch to the configured implementation (ctx env, §Perf)."""
+    from repro.distributed.ctx import get_env
+    env = get_env()
+    if env is not None and getattr(env, "moe_impl", "gspmd") == "shardmap" \
+            and not return_aux and cfg.moe_experts % env.msize == 0:
+        return moe_mlp_shardmap(params, x, cfg, env)
+    return _moe_mlp_gspmd(params, x, cfg, return_aux)
+
+
+def _moe_mlp_gspmd(params, x, cfg, return_aux=False):
+    """x: (B, S, D) -> (B, S, D). Token-choice top-k with capacity drop."""
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_topk
+    T = B * S
+    dt = x.dtype
+    xf = x.reshape(T, D)
+
+    logits = (xf @ params["router"].astype(dt)).astype(jnp.float32)   # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, K)                            # (T, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = max(int(cfg.moe_capacity_factor * T * K / E), 1)
+    flat_e = expert.reshape(-1)                                       # (T*K,)
+    flat_g = gate.reshape(-1)
+    flat_t = jnp.repeat(jnp.arange(T), K)
+
+    # stable sort by expert id; rank within expert = index - segment start
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(T * K) - starts[se]
+    keep = rank < cap
+    dest = jnp.where(keep, se * cap + rank, E * cap)                  # drop slot
+
+    # dispatch: (E*C+1, D) buffer, last row = trash for dropped tokens
+    buf = jnp.zeros((E * cap + 1, D), dt).at[dest].set(xf[st])
+    h = buf[:E * cap].reshape(E, cap, D)
+    h = constrain(h, ("model", None, None))      # expert parallelism
+
+    wi, wd = params["wi"].astype(dt), params["wd"].astype(dt)
+    a = jnp.einsum("ecd,edf->ecf", h, wi)
+    if cfg.mlp_gated:
+        a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, params["wg"].astype(dt))) * a
+    else:
+        a = jax.nn.gelu(a)
+    a = constrain(a, ("model", None, None))
+    y = jnp.einsum("ecf,efd->ecd", a, wd).reshape(E * cap, D)
+
+    # combine: gather expert outputs back to token order, weighted by gates
+    contrib = jnp.where(keep[:, None], y[jnp.minimum(dest, E * cap - 1)], 0.0)
+    out = jnp.zeros((T, D), dt).at[st].add(contrib * sg[:, None].astype(dt))
+    out = out.reshape(B, S, D)
+
+    if return_aux:
+        # Switch-style load-balance loss
+        me = probs.mean(0)                                            # (E,)
+        ce = jnp.bincount(flat_e, length=E) / (T * K)
+        aux = E * jnp.sum(me * ce)
+        return out, aux
+    return out
+
+
+def moe_mlp_shardmap(params, x, cfg, env):
+    """Explicit expert-parallel dispatch (§Perf beyond-paper optimization).
+
+    Under pure GSPMD the sort-based scatter/gather dispatch lowers to
+    full-size masked scatters + all-reduces — ~14 GiB per MoE layer per
+    microbatch on kimi-k2 (measured in the dry-run profile).  Here each
+    (data i, model j) device routes its LOCAL token shard to ITS expert
+    slice with a local sort (tokens are replicated across the model axis, so
+    no dispatch communication at all), computes the expert FFN, and the
+    per-expert-shard partial outputs are combined with one psum over
+    `model` — the Megatron-style pattern, O(activations) instead of
+    O(dispatch-buffer) collectives.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    E, K = cfg.moe_experts, cfg.moe_topk
+    mesh = env.mesh
+    ms = env.msize
+    E_loc = E // ms
+    dp = env.dp
+    gated = cfg.mlp_gated
+
+    w_specs = {
+        "router": P(None, None),
+        "wi": P("model", None, None),
+        "wd": P("model", None, None),
+    }
+    if gated:
+        w_specs["wg"] = P("model", None, None)
+
+    def local_moe(x_loc, p_loc):
+        B_loc, S, D = x_loc.shape
+        T = B_loc * S
+        dt = x_loc.dtype
+        xf = x_loc.reshape(T, D)
+        logits = (xf @ p_loc["router"].astype(dt)).astype(jnp.float32)
+        probs = jax.nn.softmax(logits, axis=-1)
+        gate, expert = jax.lax.top_k(probs, K)
+        gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+        cap = max(int(cfg.moe_capacity_factor * T * K / E), 1)
+
+        flat_e = expert.reshape(-1)
+        flat_g = gate.reshape(-1)
+        flat_t = jnp.repeat(jnp.arange(T), K)
+        order = jnp.argsort(flat_e, stable=True)
+        se, st, sg = flat_e[order], flat_t[order], flat_g[order]
+        counts = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(T * K) - starts[se]
+
+        j = jax.lax.axis_index("model")
+        e0 = j * E_loc
+        mine = (se >= e0) & (se < e0 + E_loc) & (rank < cap)
+        dest = jnp.where(mine, (se - e0) * cap + rank, E_loc * cap)
+
+        buf = jnp.zeros((E_loc * cap + 1, D), dt).at[dest].set(xf[st])
+        h = buf[:E_loc * cap].reshape(E_loc, cap, D)
+        a = jnp.einsum("ecd,edf->ecf", h, p_loc["wi"].astype(dt))
+        if gated:
+            a = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h,
+                                       p_loc["wg"].astype(dt))) * a
+        else:
+            a = jax.nn.gelu(a)
+        y = jnp.einsum("ecf,efd->ecd", a, p_loc["wd"].astype(dt))
+        y = y.reshape(E_loc * cap, D)
+        contrib = jnp.where(mine[:, None], y[jnp.minimum(dest, E_loc * cap - 1)],
+                            0.0)
+        out = jnp.zeros((T, D), dt).at[st].add(contrib * sg[:, None].astype(dt))
+        # each model shard contributed only its experts: sum across shards
+        out = jax.lax.psum(out, "model")
+        return out.reshape(B_loc, S, D)
+
+    fn = jax.shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(P(dp, None, None), w_specs),
+        out_specs=P(dp, None, None),
+        check_vma=False)
+    # cast BEFORE the shard_map boundary: the ZeRO weight all-gather then
+    # moves compute-dtype (bf16) bytes, not fp32 masters
+    cdt = x.dtype
+    return fn(x, {k: params[k].astype(cdt) for k in w_specs})

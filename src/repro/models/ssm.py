@@ -1,0 +1,173 @@
+"""Mamba2 (State Space Duality) block: chunked-parallel train/prefill path +
+O(1)-state decode recurrence.
+
+Follows the SSD formulation (Dao & Gu, 2024): scalar per-head decay A,
+per-step dt (softplus), shared B/C projections (ngroups=1), causal depthwise
+conv on (x, B, C), gated output with RMSNorm.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_rms_norm, ninit, rms_norm, zinit
+
+
+def _dims(cfg, spec):
+    d_inner = spec.expand * cfg.d_model
+    nheads = d_inner // spec.head_dim
+    return d_inner, nheads, spec.d_state
+
+
+def init_mamba(key, cfg, spec):
+    d, (d_inner, nheads, N) = cfg.d_model, _dims(cfg, spec)
+    conv_ch = d_inner + 2 * N
+    ks = jax.random.split(key, 5)
+    return {
+        # [z, x, B, C, dt]
+        "in_proj": ninit(ks[0], (d, 2 * d_inner + 2 * N + nheads)),
+        "conv_w": ninit(ks[1], (spec.d_conv, conv_ch), scale=0.1),
+        "conv_b": zinit((conv_ch,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 1e-1, nheads))),
+        "D": jnp.ones((nheads,)),
+        "norm": init_rms_norm(d_inner),
+        "out_proj": ninit(ks[2], (d_inner, d)),
+    }
+
+
+def _split_proj(params, x, cfg, spec):
+    d_inner, nheads, N = _dims(cfg, spec)
+    zxbcdt = x @ params["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner:d_inner + d_inner + 2 * N]
+    dt = zxbcdt[..., -nheads:]
+    return z, xbc, dt
+
+
+def _conv_scan(params, xbc):
+    """Causal depthwise conv over (B, S, C)."""
+    w = params["conv_w"].astype(xbc.dtype)                    # (d_conv, C)
+    d_conv = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(d_conv))
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+
+
+def mamba_forward(params, x, cfg, spec, chunk=256, return_state=False):
+    """x: (B, S, D). Chunked SSD scan; optionally return final SSM+conv state."""
+    B, S, D = x.shape
+    d_inner, H, N = _dims(cfg, spec)
+    P = spec.head_dim
+    dt_ = x.dtype
+
+    z, xbc_raw, dt = _split_proj(params, x, cfg, spec)
+    xbc = _conv_scan(params, xbc_raw)
+    xs = xbc[..., :d_inner].reshape(B, S, H, P)
+    Bm = xbc[..., d_inner:d_inner + N]                        # (B,S,N)
+    Cm = xbc[..., d_inner + N:]
+
+    # Mamba TP (§Perf): shard heads over `model`. All SSD einsums carry the
+    # head dim and never contract it, so the whole chunked scan runs 16-way
+    # parallel; B/C (shared across heads) stay replicated; out_proj's
+    # contraction over d_inner produces the single Megatron-style AR.
+    from repro.distributed.ctx import constrain, get_env
+    _env = get_env()
+    _tp = _env is not None and getattr(_env, "mamba_tp", False)
+    if _tp:
+        z = constrain(z, ("dp", None, "model"))
+        xs = constrain(xs, ("dp", None, "model", None))
+        dt = constrain(dt, ("dp", None, "model"))
+
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))         # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    dA = dt * A                                               # (B,S,H) log-decay
+
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S, "seq must be divisible by chunk"
+
+    def r(t):  # (B,S,...) -> (nc,B,c,...)
+        return t.reshape((B, nc, chunk) + t.shape[2:]).transpose(1, 0, 2, *range(3, t.ndim + 1))
+
+    xs_c, B_c, C_c = r(xs), r(Bm), r(Cm)
+    dA_c, dt_c = r(dA), r(dt)
+
+    def chunk_step(state, xs_i):
+        x_i, b_i, c_i, da_i, dt_i = xs_i                      # (B,c,...)
+        cum = jnp.cumsum(da_i, axis=1)                        # (B,c,H)
+        # intra-chunk: y[s] = sum_{j<=s} exp(cum_s - cum_j) dt_j (C_s.B_j) x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]         # (B,c,c,H)
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        # clamp masked entries BEFORE exp: exp(+large) -> inf would poison
+        # the where() gradient with 0*inf = NaN
+        decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+        cb = jnp.einsum("bsn,bjn->bsj", c_i.astype(jnp.float32),
+                        b_i.astype(jnp.float32))
+        att = cb[..., None] * decay * dt_i[:, None, :, :]     # (B,c,c,H)
+        y = jnp.einsum("bsjh,bjhp->bshp", att, x_i.astype(jnp.float32))
+        # contribution of carried state: y += C_s . state * exp(cum_s)
+        y = y + jnp.einsum("bsn,bhpn,bsh->bshp", c_i.astype(jnp.float32), state,
+                           jnp.exp(cum))
+        # new chunk state: state' = exp(cum_end)*state + sum_j exp(cum_end-cum_j) dt_j B_j x_j^T
+        dec_end = jnp.exp(cum[:, -1, None, :] - cum)          # (B,c,H)
+        sB = jnp.einsum("bjh,bjn,bjhp->bhpn", dec_end * dt_i, b_i.astype(jnp.float32),
+                        x_i.astype(jnp.float32))
+        state = jnp.exp(cum[:, -1])[:, :, None, None] * state + sB
+        return state, y
+
+    state0 = jnp.zeros((B, H, P, N), jnp.float32)
+    if _tp:
+        state0 = constrain(state0, ("dp", "model", None, None))
+    state, ys = jax.lax.scan(chunk_step, state0, (xs_c, B_c, C_c, dA_c, dt_c))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, S, H, P)
+    if _tp:
+        y = constrain(y, ("dp", None, "model", None))
+    y = y + xs.astype(jnp.float32) * params["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    if return_state:
+        d_conv = params["conv_w"].shape[0]
+        conv_state = jnp.pad(xbc_raw, ((0, 0), (d_conv - 1, 0), (0, 0)))[:, -(d_conv - 1):]
+        return out, {"ssd": state.astype(jnp.float32), "conv": conv_state}
+    return out
+
+
+def init_mamba_cache(cfg, spec, batch, dtype):
+    d_inner, H, N = _dims(cfg, spec)
+    conv_ch = d_inner + 2 * N
+    return {
+        "ssd": jnp.zeros((batch, H, spec.head_dim, N), jnp.float32),
+        "conv": jnp.zeros((batch, spec.d_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_decode(params, x, cfg, spec, cache):
+    """One-step recurrence. x: (B,1,D)."""
+    B = x.shape[0]
+    d_inner, H, N = _dims(cfg, spec)
+    P = spec.head_dim
+    dt_ = x.dtype
+
+    z, xbc_raw, dt = _split_proj(params, x, cfg, spec)        # (B,1,*)
+    # conv over ring of last d_conv inputs
+    hist = jnp.concatenate([cache["conv"], xbc_raw], axis=1)  # (B,d_conv,C)
+    w = params["conv_w"].astype(dt_)
+    xbc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(dt_))
+    new_conv = hist[:, 1:]
+
+    xh = xbc[:, :d_inner].reshape(B, H, P).astype(jnp.float32)
+    Bm = xbc[:, d_inner:d_inner + N].astype(jnp.float32)
+    Cm = xbc[:, d_inner + N:].astype(jnp.float32)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"].astype(jnp.float32))
+    decay = jnp.exp(dtv * A)                                  # (B,H)
+    state = cache["ssd"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, Bm, xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, state)
+    y = y + xh * params["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(dt_)
+    y = rms_norm(y * jax.nn.silu(z), params["norm"]["scale"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    return out, {"ssd": state, "conv": new_conv}

@@ -1,0 +1,230 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunked-parallel) and sLSTM
+(scalar-memory, true recurrence via lax.scan).
+
+Faithful to the xLSTM block structure (up-proj -> conv -> q/k/v -> cell ->
+group-norm -> gated down-proj). One documented simplification: we use
+bounded sigmoid input/forget gates rather than the exponential-gate +
+max-stabilizer form — identical state-update structure, FLOPs and memory
+(what the roofline sees), but unconditionally stable in bf16.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_rms_norm, ninit, rms_norm, zinit
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def _mdims(cfg, spec):
+    d_inner = spec.expand * cfg.d_model
+    H = spec.num_heads
+    return d_inner, H, d_inner // H
+
+
+def init_mlstm(key, cfg, spec):
+    d = cfg.d_model
+    d_inner, H, _ = _mdims(cfg, spec)
+    ks = jax.random.split(key, 8)
+    return {
+        "w_up": ninit(ks[0], (d, 2 * d_inner)),
+        "conv_w": ninit(ks[1], (4, d_inner), scale=0.1),
+        "conv_b": zinit((d_inner,)),
+        "wq": ninit(ks[2], (d_inner, d_inner)),
+        "wk": ninit(ks[3], (d_inner, d_inner)),
+        "wv": ninit(ks[4], (d_inner, d_inner)),
+        "w_gates": ninit(ks[5], (d_inner, 2 * H), scale=0.02),
+        "b_gates": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]),
+        "norm": init_rms_norm(d_inner),
+        "w_down": ninit(ks[6], (d_inner, d)),
+    }
+
+
+def _mlstm_qkv(params, x, cfg, spec):
+    dt = x.dtype
+    d_inner, H, dh = _mdims(cfg, spec)
+    up = x @ params["w_up"].astype(dt)
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    # causal depthwise conv(4)
+    w = params["conv_w"].astype(dt)
+    pad = jnp.pad(xm, ((0, 0), (w.shape[0] - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + xm.shape[1]] * w[i] for i in range(w.shape[0]))
+    xc = jax.nn.silu(xc + params["conv_b"].astype(dt))
+    B, S = x.shape[:2]
+    q = (xc @ params["wq"].astype(dt)).reshape(B, S, H, dh)
+    k = (xc @ params["wk"].astype(dt)).reshape(B, S, H, dh) / jnp.sqrt(dh).astype(dt)
+    v = (xm @ params["wv"].astype(dt)).reshape(B, S, H, dh)
+    gates = xc @ params["w_gates"].astype(dt) + params["b_gates"].astype(dt)
+    lf = jax.nn.log_sigmoid(gates[..., H:].astype(jnp.float32))      # (B,S,H)
+    ig = jax.nn.sigmoid(gates[..., :H].astype(jnp.float32))
+    return q, k, v, z, xm, lf, ig
+
+
+def mlstm_forward(params, x, cfg, spec, chunk=256, return_state=False):
+    B, S, D = x.shape
+    d_inner, H, dh = _mdims(cfg, spec)
+    dt = x.dtype
+    q, k, v, z, xm, lf, ig = _mlstm_qkv(params, x, cfg, spec)
+
+    chunk = min(chunk, S)
+    nc = S // chunk
+    assert nc * chunk == S
+
+    def r(t):
+        return t.reshape((B, nc, chunk) + t.shape[2:]).transpose(
+            1, 0, 2, *range(3, t.ndim + 1))
+
+    def chunk_step(carry, xs_i):
+        C, n = carry                                    # (B,H,dh,dh), (B,H,dh)
+        q_i, k_i, v_i, lf_i, ig_i = xs_i
+        qf, kf, vf = (t.astype(jnp.float32) for t in (q_i, k_i, v_i))
+        cum = jnp.cumsum(lf_i, axis=1)                  # (B,c,H)
+        seg = cum[:, :, None, :] - cum[:, None, :, :]
+        causal = jnp.tril(jnp.ones((chunk, chunk), bool))[None, :, :, None]
+        # clamp masked entries before exp (0*inf NaN in the where-grad)
+        decay = jnp.where(causal, jnp.exp(jnp.where(causal, seg, 0.0)), 0.0)
+        att = jnp.einsum("bshd,bjhd->bsjh", qf, kf) * decay * ig_i[:, None, :, :]
+        num = jnp.einsum("bsjh,bjhd->bshd", att, vf)
+        den = att.sum(axis=2)                           # (B,c,H)
+        # carried state contribution
+        dec_s = jnp.exp(cum)                            # (B,c,H)
+        num = num + jnp.einsum("bshd,bhdw,bsh->bshw", qf, C, dec_s)
+        den = den + jnp.einsum("bshd,bhd,bsh->bsh", qf, n, dec_s)
+        h = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+        # state update
+        dec_end = jnp.exp(cum[:, -1, None, :] - cum) * ig_i   # (B,c,H)
+        C = jnp.exp(cum[:, -1])[:, :, None, None] * C + jnp.einsum(
+            "bjh,bjhd,bjhw->bhdw", dec_end, kf, vf)
+        n = jnp.exp(cum[:, -1])[:, :, None] * n + jnp.einsum(
+            "bjh,bjhd->bhd", dec_end, kf)
+        return (C, n), h
+
+    C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+    n0 = jnp.zeros((B, H, dh), jnp.float32)
+    (C, n), hs = jax.lax.scan(chunk_step, (C0, n0),
+                              (r(q), r(k), r(v), r(lf), r(ig)))
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, d_inner).astype(dt)
+    h = rms_norm(h, params["norm"]["scale"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(dt)
+    if return_state:
+        d_conv = params["conv_w"].shape[0]
+        up = x @ params["w_up"].astype(dt)
+        conv_state = jnp.pad(up[..., :d_inner], ((0, 0), (d_conv - 1, 0), (0, 0)))[:, -(d_conv - 1):]
+        return out, {"C": C, "n": n, "conv": conv_state}
+    return out
+
+
+def init_mlstm_cache(cfg, spec, batch, dtype):
+    d_inner, H, dh = _mdims(cfg, spec)
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "conv": jnp.zeros((batch, 3, d_inner), dtype),
+    }
+
+
+def mlstm_decode(params, x, cfg, spec, cache):
+    """x: (B,1,D) single-step."""
+    B = x.shape[0]
+    d_inner, H, dh = _mdims(cfg, spec)
+    dt = x.dtype
+    up = x @ params["w_up"].astype(dt)                   # (B,1,2*d_inner)
+    xm, z = up[..., :d_inner], up[..., d_inner:]
+    hist = jnp.concatenate([cache["conv"], xm], axis=1)  # (B,4,d_inner)
+    w = params["conv_w"].astype(dt)
+    xc = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w) + params["conv_b"].astype(dt))
+    q = (xc @ params["wq"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    k = ((xc @ params["wk"].astype(dt)).reshape(B, H, dh) / jnp.sqrt(dh).astype(dt)).astype(jnp.float32)
+    v = (xm[:, 0] @ params["wv"].astype(dt)).reshape(B, H, dh).astype(jnp.float32)
+    gates = xc @ params["w_gates"].astype(dt) + params["b_gates"].astype(dt)
+    f = jax.nn.sigmoid(gates[..., H:].astype(jnp.float32))
+    i = jax.nn.sigmoid(gates[..., :H].astype(jnp.float32))
+    C = cache["C"] * f[:, :, None, None] + i[:, :, None, None] * jnp.einsum(
+        "bhd,bhw->bhdw", k, v)
+    n = cache["n"] * f[:, :, None] + i[:, :, None] * k
+    num = jnp.einsum("bhd,bhdw->bhw", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = (num / jnp.maximum(jnp.abs(den), 1.0)[..., None]).reshape(B, 1, d_inner).astype(dt)
+    h = rms_norm(h, params["norm"]["scale"], cfg.norm_eps)
+    out = (h * jax.nn.silu(z)) @ params["w_down"].astype(dt)
+    return out, {"C": C, "n": n, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, cfg, spec):
+    d = cfg.d_model
+    H = spec.num_heads
+    dh = d // H
+    p_dim = int(spec.proj_factor * d)
+    ks = jax.random.split(key, 10)
+    return {
+        "w": ninit(ks[0], (d, 4 * d)),                  # i,f,z,o input projections
+        "r": ninit(ks[1], (4, H, dh, dh), fan_in_axis=2),  # recurrent (block-diag)
+        "b": jnp.concatenate([zinit((d,)), 3.0 * jnp.ones((d,)), zinit((2 * d,))]),
+        "norm": init_rms_norm(d),
+        "w_up": ninit(ks[2], (d, 2 * p_dim)),
+        "w_down": ninit(ks[3], (p_dim, d)),
+    }
+
+
+def _slstm_cell(params, xt, state, H):
+    """xt: (B, 4d) pre-projected inputs; state: dict of (B, d)."""
+    c, n, h = state["c"], state["n"], state["h"]
+    B, d = c.shape
+    dh = d // H
+    hr = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,ghde->bghe", hr, params["r"].astype(h.dtype))  # (B,4,H,dh)
+    gates = xt.reshape(B, 4, d) + rec.reshape(B, 4, d) + params["b"].astype(h.dtype).reshape(4, d)
+    i = jax.nn.sigmoid(gates[:, 0])
+    f = jax.nn.sigmoid(gates[:, 1])
+    zv = jnp.tanh(gates[:, 2])
+    o = jax.nn.sigmoid(gates[:, 3])
+    c = f * c + i * zv
+    n = f * n + i
+    h = o * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h}
+
+
+def slstm_forward(params, x, cfg, spec, return_state=False):
+    B, S, D = x.shape
+    H = spec.num_heads
+    dt = x.dtype
+    xg = x @ params["w"].astype(dt)                     # (B,S,4d)
+    state0 = {k: jnp.zeros((B, D), dt) for k in ("c", "n", "h")}
+
+    def step(state, xt):
+        state = _slstm_cell(params, xt, state, H)
+        return state, state["h"]
+
+    state, hs = jax.lax.scan(step, state0, xg.transpose(1, 0, 2))
+    h = hs.transpose(1, 0, 2)
+    h = rms_norm(h, params["norm"]["scale"], cfg.norm_eps)
+    up = h @ params["w_up"].astype(dt)
+    p = up.shape[-1] // 2
+    out = (jax.nn.gelu(up[..., :p]) * up[..., p:]) @ params["w_down"].astype(dt)
+    if return_state:
+        return out, state
+    return out
+
+
+def init_slstm_cache(cfg, spec, batch, dtype):
+    return {k: jnp.zeros((batch, cfg.d_model), dtype) for k in ("c", "n", "h")}
+
+
+def slstm_decode(params, x, cfg, spec, cache):
+    dt = x.dtype
+    xt = (x[:, 0] @ params["w"].astype(dt))
+    state = _slstm_cell(params, xt, cache, spec.num_heads)
+    h = rms_norm(state["h"][:, None], params["norm"]["scale"], cfg.norm_eps)
+    up = h @ params["w_up"].astype(dt)
+    p = up.shape[-1] // 2
+    out = (jax.nn.gelu(up[..., :p]) * up[..., p:]) @ params["w_down"].astype(dt)
+    return out, state

@@ -1,0 +1,207 @@
+"""Fork-aware serverless coordinator (§6): seed store, long/short-lived seed
+management, fork trees, timeout GC, and startup-policy dispatch.
+
+"Functions" are model instances + a behavior callable; the coordinator
+schedules them onto invoker nodes, accelerating startup via long-lived seeds
+and state transfer via short-lived seeds, exactly mirroring the paper's Fn
+integration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+
+from repro.core import fork
+from repro.core.instance import ModelInstance
+from repro.platform.node import NodeRuntime
+
+DEFAULT_SEED_KEEPALIVE = 600.0      # §6.2: 10 min vs caching's 1 min
+DEFAULT_CACHE_KEEPALIVE = 30.0      # Fn caches coldstarted containers 30 s
+MAX_FUNCTION_LIFETIME = 900.0       # §6.3: AWS-style 15 min upper bound
+
+
+@dataclasses.dataclass
+class FunctionDef:
+    name: str
+    arch: str
+    make_params: Callable[[], Any]          # builds the pristine state
+    behavior: Callable[[ModelInstance, dict], dict]
+    exec_sim_time: float = 0.0              # modeled pure-exec seconds
+
+
+@dataclasses.dataclass
+class SeedRecord:
+    func: str
+    node_id: str
+    handler_id: int
+    auth_key: int
+    created: float
+    keep_alive: float
+    long_lived: bool
+
+
+@dataclasses.dataclass
+class ForkTreeNode:
+    func: str
+    node_id: str
+    handler_id: Optional[int]
+    children: List["ForkTreeNode"] = dataclasses.field(default_factory=list)
+
+
+class Coordinator:
+    def __init__(self, network, nodes: List[NodeRuntime], clock=time.monotonic):
+        self.network = network
+        self.nodes = {n.node_id: n for n in nodes}
+        self.clock = clock
+        self.functions: Dict[str, FunctionDef] = {}
+        self.seed_store: Dict[str, SeedRecord] = {}
+        self.fork_trees: Dict[str, ForkTreeNode] = {}
+        self.cached: Dict[str, List[tuple]] = {}       # func -> [(inst, ts)]
+        self._rr = 0
+
+    # -- registry ---------------------------------------------------------
+
+    def register_function(self, fdef: FunctionDef) -> None:
+        self.functions[fdef.name] = fdef
+
+    def pick_node(self, exclude=()) -> NodeRuntime:
+        ids = [i for i in self.nodes if self.nodes[i].alive and i not in exclude]
+        node = self.nodes[ids[self._rr % len(ids)]]
+        self._rr += 1
+        return node
+
+    # -- startup paths ------------------------------------------------------
+
+    def coldstart(self, func: str, node: NodeRuntime) -> ModelInstance:
+        fdef = self.functions[func]
+        params = fdef.make_params()
+        inst = ModelInstance.create(node, fdef.arch, params, kind="weights")
+        # §6.2: cache only the FIRST coldstart container platform-wide as seed
+        if func not in self.seed_store:
+            self.deploy_seed(func, node, instance=inst)
+        return inst
+
+    def deploy_seed(self, func: str, node: NodeRuntime,
+                    instance: Optional[ModelInstance] = None,
+                    long_lived: bool = True,
+                    keep_alive: float = DEFAULT_SEED_KEEPALIVE) -> SeedRecord:
+        fdef = self.functions[func]
+        if instance is None:
+            instance = ModelInstance.create(node, fdef.arch, fdef.make_params(),
+                                            kind="weights")
+        hid, key = fork.fork_prepare(node, instance)
+        rec = SeedRecord(func=func, node_id=node.node_id, handler_id=hid,
+                         auth_key=key, created=self.clock(),
+                         keep_alive=keep_alive, long_lived=long_lived)
+        if long_lived:
+            self.seed_store[func] = rec
+        return rec
+
+    def acquire_instance(self, func: str, *, node: Optional[NodeRuntime] = None,
+                         policy: str = "fork", lazy: bool = True,
+                         prefetch: int = 1):
+        """Start (or reuse) a container for `func` without executing it.
+        policy: fork | cache | coldstart."""
+        node = node or self.pick_node()
+        inst = None
+        if policy == "cache":
+            pool = self.cached.get(func, [])
+            # local cached instance (unpause): only usable on its own node
+            for i, (cand, ts) in enumerate(pool):
+                if cand.node is node:
+                    inst = pool.pop(i)[0]
+                    break
+        if inst is None and policy == "fork":
+            rec = self.seed_store.get(func)
+            if rec is not None and self._seed_fresh(rec):
+                inst = fork.fork_resume(node, rec.node_id, rec.handler_id,
+                                        rec.auth_key, lazy=lazy,
+                                        prefetch=prefetch)
+        if inst is None:
+            inst = self.coldstart(func, node)
+        return inst
+
+    def invoke(self, func: str, inputs: Optional[dict] = None, *,
+               node: Optional[NodeRuntime] = None, policy: str = "fork",
+               lazy: bool = True, prefetch: int = 1) -> tuple:
+        """Returns (outputs, instance). policy: fork | cache | coldstart."""
+        inst = self.acquire_instance(func, node=node, policy=policy,
+                                     lazy=lazy, prefetch=prefetch)
+        out = self.functions[func].behavior(inst, inputs or {})
+        return out, inst
+
+    def release(self, func: str, inst: ModelInstance, policy: str) -> None:
+        """Post-execution: caching keeps the container; fork frees the child
+        (§6.2: children are never cached)."""
+        if policy == "cache":
+            self.cached.setdefault(func, []).append((inst, self.clock()))
+        else:
+            inst.free()
+
+    # -- lifecycle / GC -------------------------------------------------------
+
+    def _seed_fresh(self, rec: SeedRecord) -> bool:
+        if rec.node_id not in self.network.nodes:
+            return False
+        return self.clock() - rec.created < rec.keep_alive
+
+    def renew_seed(self, func: str) -> None:
+        rec = self.seed_store.get(func)
+        if rec:
+            rec.created = self.clock()
+
+    def gc(self) -> dict:
+        """Timeout-based reclamation: expired long-lived seeds, stale cached
+        containers, and node-side dangling short-lived seeds (§6.3)."""
+        now = self.clock()
+        freed = {"seeds": 0, "cached": 0, "dangling": 0}
+        for func, rec in list(self.seed_store.items()):
+            if now - rec.created >= rec.keep_alive:
+                node = self.nodes.get(rec.node_id)
+                if node is not None:
+                    fork.fork_reclaim(node, rec.handler_id, free_instance=True)
+                del self.seed_store[func]
+                freed["seeds"] += 1
+        for func, pool in self.cached.items():
+            keep = []
+            for inst, ts in pool:
+                if now - ts >= DEFAULT_CACHE_KEEPALIVE:
+                    inst.free()
+                    freed["cached"] += 1
+                else:
+                    keep.append((inst, ts))
+            self.cached[func] = keep
+        # invoker-side fault tolerance: GC seeds past max function lifetime
+        for node in self.nodes.values():
+            for hid, entry in list(node.seeds.items()):
+                if now - entry.created >= MAX_FUNCTION_LIFETIME:
+                    fork.fork_reclaim(node, hid, free_instance=False)
+                    freed["dangling"] += 1
+        return freed
+
+    # -- fork trees (short-lived seeds, §6.3) -----------------------------------
+
+    def tree_open(self, wf_id: str, root: ForkTreeNode) -> None:
+        self.fork_trees[wf_id] = root
+
+    def tree_close(self, wf_id: str) -> None:
+        """Reclaim every short-lived seed in the tree except the root."""
+        root = self.fork_trees.pop(wf_id, None)
+        if root is None:
+            return
+
+        def walk(n: ForkTreeNode, is_root: bool):
+            for c in n.children:
+                walk(c, False)
+            if not is_root and n.handler_id is not None:
+                node = self.nodes.get(n.node_id)
+                if node is not None:
+                    fork.fork_reclaim(node, n.handler_id, free_instance=False)
+
+        walk(root, True)
+
+    def memory_by_node(self) -> Dict[str, int]:
+        return {i: n.memory_bytes() for i, n in self.nodes.items()}

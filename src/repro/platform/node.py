@@ -1,0 +1,135 @@
+"""NodeRuntime — one "machine" (kernel) in the MITOSIS cluster.
+
+Hosts the page pool, prepared seeds, the DC-target pool (pooled, refilled in
+the background per §5.4), the sibling page cache, the fallback daemon, and
+swap-out (the VA->PA-change corner case that exercises connection-based
+access control).
+"""
+from __future__ import annotations
+
+import itertools
+import secrets
+import time
+from typing import Dict, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.memory.pool import PAGE_ELEMS, PagePool
+
+
+class SeedEntry:
+    def __init__(self, descriptor, blob, auth_key, instance, keys, created):
+        self.descriptor = descriptor
+        self.blob = blob
+        self.auth_key = auth_key
+        self.instance = instance
+        self.keys = keys                  # vma name -> DC key
+        self.created = created
+        self.forks = 0
+
+
+class NodeRuntime:
+    def __init__(self, node_id: str, network, page_elems: int = PAGE_ELEMS,
+                 cache_enabled: bool = False, clock=time.monotonic):
+        self.node_id = node_id
+        self.network = network
+        self.pool = PagePool(page_elems)
+        self.clock = clock
+        self.instances: Dict[int, "object"] = {}
+        self.seeds: Dict[int, SeedEntry] = {}
+        self.cache_enabled = cache_enabled
+        self._page_cache: Dict[tuple, int] = {}
+        self._page_cache_frames: list = []
+        self._dc_pool: list = []
+        self._swapped: Dict[tuple, np.ndarray] = {}
+        self._iid = itertools.count()
+        self._hid = itertools.count(1)
+        self.alive = True
+        network.register(self)
+
+    def new_instance_id(self) -> int:
+        return next(self._iid)
+
+    # -- DC target pooling (§5.4: creation amortized via pooling) -------------
+
+    def refill_dc_pool(self, n: int) -> None:
+        for _ in range(n):
+            self._dc_pool.append(self.network.create_dc_target(self.node_id))
+
+    def take_dc_target(self) -> int:
+        if self._dc_pool:
+            return self._dc_pool.pop()
+        return self.network.create_dc_target(self.node_id)
+
+    # -- seed registry ---------------------------------------------------------
+
+    def register_seed(self, handler_id: int, entry: SeedEntry) -> None:
+        self.seeds[handler_id] = entry
+
+    def auth_seed(self, handler_id: int, auth_key: int) -> dict:
+        """Authentication RPC (§5.2): validates the id/key, returns the
+        descriptor's address+size for the follow-up one-sided read."""
+        e = self.seeds.get(handler_id)
+        if e is None or e.auth_key != auth_key:
+            raise PermissionError(f"bad seed credentials for {handler_id}")
+        return {"nbytes": len(e.blob)}
+
+    def seed_blob(self, handler_id: int) -> bytes:
+        return self.seeds[handler_id].blob
+
+    # -- fallback daemon (§5.4) -------------------------------------------------
+
+    def fallback_serve(self, dtype, frames):
+        """RPC handler: load pages on behalf of a child (swapped or live)."""
+        dt = jnp.dtype(dtype).name
+        pages = []
+        for f in np.asarray(frames).tolist():
+            key = (dt, int(f))
+            if key in self._swapped:
+                pages.append(jnp.asarray(self._swapped[key]))
+            else:
+                pages.append(self.pool.read_pages(dtype, np.asarray([f], np.int32))[0])
+        return jnp.stack(pages)
+
+    # -- swap-out: the VA->PA change corner case ---------------------------------
+
+    def swap_out_vma(self, instance, name: str) -> None:
+        """Move a VMA's pages to "disk" and destroy its DC targets, so
+        children's one-sided reads are rejected and take the fallback path."""
+        vma = instance.aspace[name]
+        dt = jnp.dtype(vma.dtype).name
+        data = np.asarray(self.pool.read_pages(vma.dtype, vma.frames))
+        for i, f in enumerate(vma.frames.tolist()):
+            self._swapped[(dt, int(f))] = data[i]
+        for e in self.seeds.values():
+            if e.instance is instance and name in e.keys:
+                self.network.destroy_dc_target(self.node_id, e.keys[name])
+
+    # -- sibling page cache (MITOSIS+cache, §5.4 optimizations) -------------------
+
+    def page_cache_get(self, owner: str, dtype: str, frame: int) -> Optional[int]:
+        if not self.cache_enabled:
+            return None
+        return self._page_cache.get((owner, jnp.dtype(dtype).name, int(frame)))
+
+    def page_cache_put(self, owner: str, dtype: str, frame: int, local: int) -> None:
+        if not self.cache_enabled:
+            return
+        self._page_cache[(owner, jnp.dtype(dtype).name, int(frame))] = local
+
+    def clear_page_cache(self) -> None:
+        self._page_cache.clear()
+
+    # -- failure ------------------------------------------------------------------
+
+    def crash(self) -> None:
+        self.alive = False
+        self.network.unregister(self.node_id)
+
+    def memory_bytes(self) -> int:
+        return self.pool.bytes_allocated()
+
+
+def make_auth_key() -> int:
+    return secrets.randbits(62)

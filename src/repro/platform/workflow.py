@@ -1,0 +1,153 @@
+"""Serverless workflows (§2.3, §6.1): DAGs of functions with fork-based
+state transfer, plus the message-passing baseline (Fn/Redis-style).
+
+Upstream functions pre-materialize state into their instance
+(`instance.add_tensor`); downstream functions fork the upstream seed and
+read it with zero serialization — the FINRA pattern of Figure 3(b).
+"""
+from __future__ import annotations
+
+import dataclasses
+import pickle
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fork
+from repro.platform.coordinator import Coordinator, ForkTreeNode
+
+
+@dataclasses.dataclass
+class WorkflowFunc:
+    name: str
+    func: str                      # FunctionDef name at the coordinator
+    fork_from: Optional[str] = None  # annotated upstream to fork (§6.1)
+
+
+class Workflow:
+    def __init__(self, wf_id: str):
+        self.wf_id = wf_id
+        self.nodes: Dict[str, WorkflowFunc] = {}
+        self.edges: List[tuple] = []
+
+    def add(self, wfunc: WorkflowFunc) -> "Workflow":
+        self.nodes[wfunc.name] = wfunc
+        return self
+
+    def edge(self, up: str, down: str) -> "Workflow":
+        self.edges.append((up, down))
+        return self
+
+    def topo_order(self) -> List[str]:
+        indeg = {n: 0 for n in self.nodes}
+        for u, v in self.edges:
+            indeg[v] += 1
+        order, frontier = [], [n for n, d in indeg.items() if d == 0]
+        while frontier:
+            n = frontier.pop(0)
+            order.append(n)
+            for u, v in self.edges:
+                if u == n:
+                    indeg[v] -= 1
+                    if indeg[v] == 0:
+                        frontier.append(v)
+        assert len(order) == len(self.nodes), "cycle in workflow"
+        return order
+
+    def upstreams(self, name: str) -> List[str]:
+        return [u for u, v in self.edges if v == name]
+
+
+def run_workflow(coord: Coordinator, wf: Workflow, inputs: dict, *,
+                 transfer: str = "fork", fan_out: Dict[str, int] = None,
+                 prefetch: int = 1) -> dict:
+    """Execute a workflow. transfer: "fork" (MITOSIS) or "message"
+    (serialize->copy->deserialize, the Fn/Redis baseline).
+
+    fan_out: optional {func_name: n} to run n parallel children of one node
+    (FINRA's ~200 runAuditRule instances)."""
+    fan_out = fan_out or {}
+    results: Dict[str, Any] = {}
+    instances: Dict[str, Any] = {}
+    seeds: Dict[str, tuple] = {}           # wf node -> (node_id, hid, key)
+    root = ForkTreeNode(func="<root>", node_id="", handler_id=None)
+    tree_nodes = {None: root}
+    coord.tree_open(wf.wf_id, root)
+    mailbox: Dict[str, bytes] = {}
+
+    for name in wf.topo_order():
+        wfunc = wf.nodes[name]
+        fdef = coord.functions[wfunc.func]
+        ups = wf.upstreams(name)
+        n_copies = fan_out.get(name, 1)
+        outs = []
+        for ci in range(n_copies):
+            node = coord.pick_node()
+            ctx = dict(inputs)
+            inst = None
+            if transfer == "fork" and ups:
+                src = wfunc.fork_from or ups[0]
+                node_id, hid, key = seeds[src]
+                inst = fork.fork_resume(node, node_id, hid, key, lazy=True,
+                                        prefetch=prefetch)
+                ctx["__fork_parent"] = src
+            elif transfer == "message" and ups:
+                # Fn-style: deserialize upstream state from the mailbox
+                for u in ups:
+                    ctx[f"msg:{u}"] = pickle.loads(mailbox[u])
+            if inst is None:
+                inst = coord.acquire_instance(wfunc.func, node=node,
+                                              policy="fork")
+            out = fdef.behavior(inst, ctx)
+            outs.append(out)
+            tn = ForkTreeNode(func=name, node_id=node.node_id, handler_id=None)
+            tree_nodes.setdefault(name, tn)
+            parent_tn = tree_nodes.get(wfunc.fork_from or (ups[0] if ups else None), root)
+            parent_tn.children.append(tn)
+            instances.setdefault(name, []).append(inst)
+        results[name] = outs if n_copies > 1 else outs[0]
+
+        # prepare this node as a short-lived seed for downstreams (§6.1)
+        has_down = any(u == name for u, _ in wf.edges)
+        if has_down:
+            if transfer == "fork":
+                inst0 = instances[name][0]
+                hid, key = fork.fork_prepare(inst0.node, inst0)
+                seeds[name] = (inst0.node.node_id, hid, key)
+                tree_nodes[name].handler_id = hid
+            else:
+                # message baseline: serialize outputs (the cost MITOSIS skips)
+                payload = {k: np.asarray(v) if hasattr(v, "shape") else v
+                           for k, v in (results[name] or {}).items()}
+                mailbox[name] = pickle.dumps(payload)
+                nbytes = len(mailbox[name])
+                coord.network.meter["msg_bytes"] += nbytes
+                # modeled store round trip: producer PUT + consumer GET
+                # (Redis-style; paper: ~27 ms store latency for FINRA)
+                nm = coord.network.model
+                coord.network.sim_time += 2 * nbytes / nm.rdma_bw + 27e-3
+
+    coord.tree_close(wf.wf_id)
+    for insts in instances.values():
+        for inst in insts:
+            inst.free()
+    return results
+
+
+# ---------------------------------------------------------------------------
+# FINRA (Figure 2): fetchPortfolioData + fetchMarketData -> runAuditRule x N
+# ---------------------------------------------------------------------------
+
+
+def build_finra(coord: Coordinator, market_mb: float = 6.0,
+                n_rules: int = 8) -> Workflow:
+    """The paper's FINRA app: upstream functions fetch market/portfolio data
+    (fused, per §7.6), N audit-rule children consume it."""
+    wf = Workflow("finra")
+    wf.add(WorkflowFunc(name="fetchData", func="finra-fetch"))
+    wf.add(WorkflowFunc(name="runAuditRule", func="finra-audit",
+                        fork_from="fetchData"))
+    wf.edge("fetchData", "runAuditRule")
+    return wf

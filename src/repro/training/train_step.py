@@ -1,0 +1,91 @@
+"""The jit-able training step: microbatch gradient accumulation (lax.scan),
+remat policy from the arch config, optional gradient "compression" (bf16
+accumulators -> bf16 cross-replica all-reduces, visible in the dry-run's
+collective bytes), AdamW + clip + schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import lm
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+from repro.training.schedule import warmup_cosine
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10000
+    microbatches: int = 1
+    grad_dtype: str = "float32"      # "bfloat16" = compressed grad collectives
+    remat: Optional[str] = None      # None -> cfg.remat_policy
+    q_chunk: int = 1024
+    exact_causal: bool = False
+    xent_chunk: int = 512
+    adamw: AdamWConfig = AdamWConfig()
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig):
+    """Returns train_step(params, opt_state, tokens, labels) -> (params,
+    opt_state, metrics). tokens/labels: (B, S) int32 (or (B,S,CB))."""
+
+    def loss_of(p, tok, lab):
+        return lm.loss_fn(p, cfg, tok, lab, q_chunk=tcfg.q_chunk,
+                          exact_causal=tcfg.exact_causal, remat=tcfg.remat,
+                          xent_chunk=tcfg.xent_chunk)
+
+    grad_fn = jax.value_and_grad(loss_of)
+    gdt = jnp.dtype(tcfg.grad_dtype)
+
+    def train_step(params, opt_state, tokens, labels):
+        mb = tcfg.microbatches
+        B = tokens.shape[0]
+        assert B % mb == 0, (B, mb)
+
+        if mb == 1:
+            loss, grads = grad_fn(params, tokens, labels)
+            grads = jax.tree.map(lambda g: g.astype(gdt), grads)
+        else:
+            tok_mb = tokens.reshape((mb, B // mb) + tokens.shape[1:])
+            lab_mb = labels.reshape((mb, B // mb) + labels.shape[1:])
+
+            def micro(acc, xs):
+                tok, lab = xs
+                l, g = grad_fn(params, tok, lab)
+                acc_l, acc_g = acc
+                acc_g = jax.tree.map(lambda a, b: a + b.astype(gdt), acc_g, g)
+                return (acc_l + l, acc_g), None
+
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            (loss, grads), _ = jax.lax.scan(
+                micro, (jnp.zeros((), jnp.float32), zero_g), (tok_mb, lab_mb))
+            loss = loss / mb
+            grads = jax.tree.map(lambda g: g / mb, grads)
+
+        lr = warmup_cosine(opt_state["count"], peak_lr=tcfg.peak_lr,
+                           warmup=tcfg.warmup, total=tcfg.total_steps)
+        params, opt_state, gnorm = adamw_update(params, grads, opt_state, lr,
+                                                tcfg.adamw)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_serve_prefill(cfg: ArchConfig, cache_len: int, q_chunk: int = 1024):
+    def serve_prefill(params, tokens):
+        return lm.prefill(params, cfg, tokens, cache_len, q_chunk=q_chunk)
+    return serve_prefill
+
+
+def make_serve_decode(cfg: ArchConfig):
+    def serve_decode(params, caches, token, pos):
+        return lm.decode_step(params, cfg, caches, token, pos)
+    return serve_decode

@@ -1,0 +1,36 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs.base import get_arch, reduce_for_smoke
+from repro.core.network import Network
+from repro.models import lm
+from repro.platform.node import NodeRuntime
+
+
+@pytest.fixture()
+def cluster():
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(4)]
+    return net, nodes
+
+
+@pytest.fixture(scope="session")
+def smoke_cfg():
+    return reduce_for_smoke(get_arch("stablelm-3b"))
+
+
+@pytest.fixture(scope="session")
+def smoke_params(smoke_cfg):
+    return lm.init_params(jax.random.PRNGKey(0), smoke_cfg)
+
+
+@pytest.fixture(scope="session")
+def hello_cfg():
+    return dataclasses.replace(get_arch("micro-hello"), compute_dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def hello_params(hello_cfg):
+    return lm.init_params(jax.random.PRNGKey(0), hello_cfg)

@@ -1,0 +1,51 @@
+"""Descriptor codec + pytree path utilities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.descriptor import (Descriptor, flatten_with_names,
+                                   unflatten_from_paths)
+
+
+def test_flatten_unflatten_nested():
+    tree = {"a": {"b": [jnp.ones(2), jnp.zeros(3)]},
+            "c": [{"d": jnp.full(4, 7.0)}]}
+    names, paths, leaves = flatten_with_names(tree)
+    rebuilt = unflatten_from_paths(paths, leaves)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    assert "a/b/0" in names and "c/0/d" in names
+
+
+def test_descriptor_roundtrip_and_size():
+    d = Descriptor(
+        arch="micro", kind="weights", parent_node="node0", handler_id=3,
+        ancestry=["node1", "node2"],
+        leaf_paths=[["a", 0], ["b"]],
+        vmas=[{"name": "a/0", "shape": [2, 2], "dtype": "float32",
+               "npages": 1, "owner_hop": b"\x00", "frames": b"\x01\x00\x00\x00",
+               "dc_keys": {1: 5}}],
+        registers={"step": 7, "rng": np.arange(2, dtype=np.uint32)},
+        extra={"prepared_keys": {"a/0": 9}, "leaf_names": ["a/0", "b"]},
+    )
+    blob = d.to_bytes()
+    e = Descriptor.from_bytes(blob)
+    assert e.arch == "micro" and e.handler_id == 3
+    assert e.ancestry == ["node1", "node2"]
+    assert e.registers["step"] == 7
+    np.testing.assert_array_equal(e.registers["rng"], d.registers["rng"])
+    assert e.extra["prepared_keys"]["a/0"] == 9
+    # metadata-only: small
+    assert len(blob) < 4096
+
+
+def test_descriptor_is_metadata_only(cluster, hello_cfg, hello_params):
+    """The paper's core claim: descriptor KBs vs instance MBs."""
+    from repro.core import fork
+    from repro.core.instance import ModelInstance
+    net, nodes = cluster
+    inst = ModelInstance.create(nodes[0], hello_cfg.name, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], inst)
+    blob = nodes[0].seeds[hid].blob
+    assert len(blob) < inst.total_bytes() / 50, \
+        f"descriptor {len(blob)}B not << state {inst.total_bytes()}B"

@@ -1,0 +1,170 @@
+"""The remote-fork primitive: prepare/resume semantics, COW isolation,
+multi-hop lineage, access control, fallback, caching, prefetch."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fork
+from repro.core.instance import ModelInstance
+from repro.core.network import AccessRevoked
+from repro.models import lm
+
+
+def _mk_parent(node, cfg, params):
+    return ModelInstance.create(node, cfg.name, params, kind="weights")
+
+
+def test_resume_lazy_then_equal(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    assert child.resident_fraction() == 0.0
+    got = child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert child.resident_fraction() == 1.0
+    assert net.meter["rdma_bytes"] > 0
+
+
+def test_bad_credentials_rejected(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    with pytest.raises(PermissionError):
+        fork.fork_resume(nodes[1], "node0", hid, key + 1)
+    with pytest.raises(PermissionError):
+        fork.fork_resume(nodes[1], "node0", hid + 99, key)
+
+
+def test_cow_isolation(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key)
+    name = child.leaf_names[2]
+    before = np.asarray(parent.ensure_tensor(name)).copy()
+    child.write_tensor(name, jnp.ones(child.aspace[name].shape))
+    np.testing.assert_array_equal(np.asarray(parent.ensure_tensor(name)), before)
+    # and the child sees its own write
+    np.testing.assert_array_equal(np.asarray(child.ensure_tensor(name)),
+                                  np.ones(child.aspace[name].shape))
+
+
+def test_page_granular_cow(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key)
+    name = max(child.leaf_names, key=lambda n: child.aspace[n].npages)
+    vma = child.aspace[name]
+    assert vma.npages >= 2
+    pe = nodes[1].pool.page_elems
+    child.write_pages(name, [0], jnp.full((1, pe), 3.14))
+    # page 0 dirty+local; other pages still remote
+    assert vma.flags[0] & 2
+    assert vma.owner_hop[0] == 0 and vma.owner_hop[1] == 1
+    got = np.asarray(child.ensure_tensor(name)).ravel()
+    want = np.asarray(parent.ensure_tensor(name)).ravel().copy()
+    want[:pe] = 3.14
+    np.testing.assert_allclose(got[:pe], want[:pe])
+    np.testing.assert_array_equal(got[pe:], want[pe:])
+
+
+def test_multihop_three_nodes(cluster, hello_cfg, hello_params):
+    """grandchild reads hop-2 pages from the grandparent directly."""
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    # child materializes only one tensor, rest stay on the grandparent
+    touched = child.leaf_names[0]
+    child.ensure_tensor(touched)
+    hid2, key2 = fork.fork_prepare(nodes[1], child)
+    gchild = fork.fork_resume(nodes[2], "node1", hid2, key2, lazy=True)
+    hops = {n: set(np.unique(gchild.aspace[n].owner_hop).tolist())
+            for n in gchild.leaf_names}
+    assert hops[touched] == {1}          # owned by child
+    untouched = [n for n in gchild.leaf_names if n != touched]
+    assert any(2 in hops[n] for n in untouched)   # still on grandparent
+    got = gchild.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_reclaim_revokes_remote_access(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    fork.fork_reclaim(nodes[0], hid)
+    name = child.leaf_names[0]
+    # DC target destroyed -> RNIC rejects; fallback daemon still serves
+    # (pages are alive because the instance itself wasn't freed)
+    child.ensure_tensor(name)
+    assert child.stats["pages_rpc"] > 0 and child.stats["pages_rdma"] == 0
+
+
+def test_swap_out_triggers_fallback(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    name = child.leaf_names[1]
+    before = np.asarray(parent.ensure_tensor(name)).copy()
+    nodes[0].swap_out_vma(parent, name)
+    got = np.asarray(child.ensure_tensor(name))
+    np.testing.assert_array_equal(got, before)
+    assert child.stats["pages_rpc"] > 0
+
+
+def test_sibling_page_cache(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    nodes[1].cache_enabled = True
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    c1 = fork.fork_resume(nodes[1], "node0", hid, key)
+    c1.ensure_all()
+    rdma_after_first = net.meter["rdma_bytes"]
+    c2 = fork.fork_resume(nodes[1], "node0", hid, key)
+    c2.ensure_all()
+    assert c2.stats["pages_cached"] > 0 and c2.stats["pages_rdma"] == 0
+    # only the descriptor fetch hit the wire the second time
+    assert net.meter["rdma_bytes"] - rdma_after_first < 8192
+
+
+def test_prefetch_reduces_faults(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    name = max(parent.aspace, key=lambda n: parent.aspace[n].npages)
+    npages = parent.aspace[name].npages
+
+    c0 = fork.fork_resume(nodes[1], "node0", hid, key)
+    for p in range(npages):
+        c0.touch_pages(name, [p], prefetch=0)
+    c1 = fork.fork_resume(nodes[2], "node0", hid, key)
+    for p in range(npages):
+        c1.touch_pages(name, [p], prefetch=2)
+    assert c1.stats["faults"] < c0.stats["faults"]
+
+
+def test_parent_crash_surfaces(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    nodes[0].crash()
+    with pytest.raises(ConnectionError):
+        child.ensure_all()
+
+
+def test_registers_travel_in_descriptor(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = ModelInstance.create(nodes[0], hello_cfg.name, hello_params,
+                                  registers={"step": 41, "temp": 0.7})
+    hid, key = fork.fork_prepare(nodes[0], parent)
+    child = fork.fork_resume(nodes[1], "node0", hid, key)
+    assert child.registers["step"] == 41
+    assert abs(child.registers["temp"] - 0.7) < 1e-9

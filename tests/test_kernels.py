@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cow_scatter.kernel import cow_scatter
+from repro.kernels.cow_scatter.ref import cow_scatter_ref
+from repro.kernels.page_gather.kernel import page_gather
+from repro.kernels.page_gather.ops import page_gather as page_gather_op
+from repro.kernels.page_gather.ref import page_gather_ref
+from repro.kernels.paged_attention.kernel import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+
+@pytest.mark.parametrize("F,E,n", [(8, 128, 3), (32, 512, 32), (64, 1024, 1)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+def test_page_gather_sweep(F, E, n, dtype):
+    key = jax.random.PRNGKey(F * E + n)
+    if dtype == jnp.int32:
+        frames = jax.random.randint(key, (F, E), 0, 1000)
+    else:
+        frames = jax.random.normal(key, (F, E), dtype)
+    ids = jax.random.randint(key, (n,), 0, F)
+    got = page_gather(frames, ids, interpret=True)
+    want = page_gather_ref(frames, ids)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_page_gather_duplicate_ids():
+    frames = jnp.arange(8 * 128, dtype=jnp.float32).reshape(8, 128)
+    ids = jnp.array([5, 5, 5], jnp.int32)
+    got = page_gather(frames, ids, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.stack([frames[5]] * 3)))
+
+
+def test_page_gather_op_backend_switch():
+    frames = jnp.arange(4 * 128, dtype=jnp.float32).reshape(4, 128)
+    ids = jnp.array([2, 0], jnp.int32)
+    for backend in ("auto", "kernel", "ref"):
+        got = page_gather_op(frames, ids, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got),
+                                      np.asarray(frames[jnp.asarray(ids)]))
+
+
+@pytest.mark.parametrize("F,E,n", [(8, 128, 3), (16, 256, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_cow_scatter_sweep(F, E, n, dtype):
+    key = jax.random.PRNGKey(F + n)
+    frames = jax.random.normal(key, (F, E), dtype)
+    ids = np.random.default_rng(0).choice(F, size=n, replace=False).astype(np.int32)
+    pages = jax.random.normal(jax.random.PRNGKey(1), (n, E), dtype)
+    want = cow_scatter_ref(frames, jnp.asarray(ids), pages)
+    # kernel donates `frames` (in-place COW commit) — call it last
+    got = cow_scatter(frames, jnp.asarray(ids), pages, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(want, np.float32))
+
+
+def test_cow_scatter_leaves_other_frames():
+    frames = jnp.ones((6, 128), jnp.float32)
+    pages = jnp.zeros((1, 128), jnp.float32)
+    got = cow_scatter(frames, jnp.array([3], jnp.int32), pages, interpret=True)
+    assert float(got[3].sum()) == 0.0
+    assert float(got[0].sum()) == 128.0
+
+
+@pytest.mark.parametrize("B,K,G,hd,Tp,P,F", [
+    (2, 2, 4, 128, 8, 4, 16),
+    (1, 1, 8, 128, 16, 2, 8),       # MQA
+    (3, 4, 1, 256, 8, 3, 24),       # MHA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_sweep(B, K, G, hd, Tp, P, F, dtype):
+    keys = [jax.random.PRNGKey(i) for i in range(5)]
+    q = jax.random.normal(keys[0], (B, K, G, hd), dtype)
+    pk = jax.random.normal(keys[1], (F, Tp, K, hd), dtype)
+    pv = jax.random.normal(keys[2], (F, Tp, K, hd), dtype)
+    pt = jax.random.randint(keys[3], (B, P), 0, F)
+    vt = jax.random.randint(keys[4], (B, P), 0, F)
+    lengths = jax.random.randint(keys[4], (B,), 1, P * Tp + 1)
+    got = paged_attention(q, pk, pv, pt, lengths, v_page_table=vt,
+                          interpret=True)
+    want = paged_attention_ref(q, pk, pv, pt, lengths, v_page_table=vt)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 3e-5
+    err = float(jnp.max(jnp.abs(got.astype(jnp.float32)
+                                - want.astype(jnp.float32))))
+    assert err < tol, err
+
+
+def test_paged_attention_window_starts():
+    B, K, G, hd, Tp, P, F = 2, 1, 2, 128, 8, 4, 12
+    q = jax.random.normal(jax.random.PRNGKey(0), (B, K, G, hd))
+    pk = jax.random.normal(jax.random.PRNGKey(1), (F, Tp, K, hd))
+    pv = jax.random.normal(jax.random.PRNGKey(2), (F, Tp, K, hd))
+    pt = jax.random.randint(jax.random.PRNGKey(3), (B, P), 0, F)
+    lengths = jnp.array([30, 25], jnp.int32)
+    starts = jnp.array([10, 0], jnp.int32)
+    got = paged_attention(q, pk, pv, pt, lengths, starts=starts, interpret=True)
+    want = paged_attention_ref(q, pk, pv, pt, lengths, starts=starts)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    # and starts matter
+    want0 = paged_attention_ref(q, pk, pv, pt, lengths)
+    assert float(jnp.abs(want - want0).max()) > 1e-4

@@ -1,0 +1,82 @@
+"""Unit tests: page pool allocator, tensor paging, VMA hop encoding."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pagetable import F_DIRTY, F_PRESENT, MAX_HOPS, VMA
+from repro.memory import paging
+from repro.memory.pool import PagePool
+
+
+def test_pool_alloc_free_cycle():
+    pool = PagePool(page_elems=256, grow_frames=8)
+    a = pool.alloc(jnp.float32, 5)
+    assert len(set(a.tolist())) == 5
+    assert pool.num_allocated(jnp.float32) == 5
+    pool.free(jnp.float32, a[:2])
+    assert pool.num_allocated(jnp.float32) == 3
+    b = pool.alloc(jnp.float32, 4)
+    assert set(b.tolist()).isdisjoint(set(a[2:].tolist()))
+
+
+def test_pool_rw_roundtrip():
+    pool = PagePool(page_elems=128)
+    frames = pool.alloc(jnp.bfloat16, 3)
+    data = jnp.arange(3 * 128, dtype=jnp.bfloat16).reshape(3, 128)
+    pool.write_pages(jnp.bfloat16, frames, data)
+    got = pool.read_pages(jnp.bfloat16, frames)
+    np.testing.assert_array_equal(np.asarray(got, np.float32),
+                                  np.asarray(data, np.float32))
+
+
+def test_pool_dtype_isolation():
+    pool = PagePool(page_elems=64)
+    f32 = pool.alloc(jnp.float32, 2)
+    bf16 = pool.alloc(jnp.bfloat16, 2)
+    assert pool.bytes_allocated() == 2 * 64 * 4 + 2 * 64 * 2
+
+
+def test_paging_roundtrip():
+    x = jnp.arange(1000, dtype=jnp.float32).reshape(10, 100)
+    pages = paging.to_pages(x, 256)
+    assert pages.shape == (4, 256)
+    y = paging.from_pages(pages, (10, 100), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_vma_child_view_hops_and_keys():
+    v = VMA.new_local("w", (4, 4), "float32", np.arange(3, dtype=np.int32))
+    v.dc_keys = {}
+    c1 = v.child_view(parent_key=101)
+    assert (c1.owner_hop == 1).all()
+    assert c1.dc_keys == {1: 101}
+    assert not c1.resident_mask().any()
+    c2 = c1.child_view(parent_key=202)
+    assert (c2.owner_hop == 2).all()
+    assert c2.dc_keys == {1: 202, 2: 101}
+
+
+def test_vma_hop_overflow():
+    v = VMA.new_local("w", (4,), "float32", np.arange(1, dtype=np.int32))
+    for i in range(MAX_HOPS):
+        v = v.child_view(i)
+    with pytest.raises(OverflowError):
+        v.child_view(99)
+
+
+def test_vma_partial_residency():
+    v = VMA.new_local("w", (8,), "float32", np.arange(4, dtype=np.int32))
+    c = v.child_view(7)
+    c.mark_resident([1, 3], [10, 11])
+    assert set(c.missing_pages().tolist()) == {0, 2}
+    assert c.frames[1] == 10 and c.owner_hop[1] == 0
+    assert c.owner_hop[0] == 1
+
+
+def test_vma_table_roundtrip():
+    v = VMA.new_local("a/b/w", (3, 5), "bfloat16", np.arange(2, dtype=np.int32))
+    v.dc_keys = {1: 42, 3: 77}
+    w = VMA.from_table_dict(v.table_dict())
+    assert w.name == v.name and w.shape == v.shape and w.dtype == v.dtype
+    np.testing.assert_array_equal(w.frames, v.frames)
+    assert w.dc_keys == v.dc_keys

@@ -1,0 +1,155 @@
+"""Coordinator / lifecycle / workflow integration tests (§6)."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import fork
+from repro.core.instance import ModelInstance
+from repro.core.network import Network
+from repro.models import lm
+from repro.platform.coordinator import Coordinator, FunctionDef
+from repro.platform.node import NodeRuntime
+from repro.platform.workflow import Workflow, WorkflowFunc, run_workflow
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+@pytest.fixture()
+def platform(hello_cfg, hello_params):
+    net = Network()
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(3)]
+    coord = Coordinator(net, nodes, clock=clock)
+
+    def behavior(inst, ctx):
+        inst.ensure_tensor(inst.leaf_names[0])
+        return {"ok": True}
+
+    coord.register_function(FunctionDef(
+        name="f", arch=hello_cfg.name,
+        make_params=lambda: hello_params, behavior=behavior))
+    return net, nodes, coord, clock
+
+
+def test_first_coldstart_becomes_seed(platform):
+    net, nodes, coord, clock = platform
+    assert "f" not in coord.seed_store
+    out, inst = coord.invoke("f", policy="fork")
+    assert out["ok"] and "f" in coord.seed_store
+    # second invoke forks instead of coldstarting: lazy child
+    out2, inst2 = coord.invoke("f", policy="fork")
+    assert inst2.ancestry, "second invoke must be a fork child"
+
+
+def test_seed_timeout_gc(platform):
+    net, nodes, coord, clock = platform
+    coord.invoke("f")
+    rec = coord.seed_store["f"]
+    clock.t = rec.keep_alive + 1
+    freed = coord.gc()
+    assert freed["seeds"] == 1 and "f" not in coord.seed_store
+
+
+def test_seed_renew(platform):
+    net, nodes, coord, clock = platform
+    coord.invoke("f")
+    clock.t = 500.0
+    coord.renew_seed("f")
+    clock.t = 700.0           # < 500 + 600
+    coord.gc()
+    assert "f" in coord.seed_store
+
+
+def test_cache_policy_is_per_node_and_single_use(platform):
+    net, nodes, coord, clock = platform
+    out, inst = coord.invoke("f", policy="cache", node=nodes[0])
+    coord.release("f", inst, policy="cache")
+    # reuse on the same node hits the cache
+    out2, inst2 = coord.invoke("f", policy="cache", node=nodes[0])
+    assert inst2 is inst
+    coord.release("f", inst2, policy="cache")
+    # a different node cannot use it -> coldstart
+    out3, inst3 = coord.invoke("f", policy="cache", node=nodes[1])
+    assert inst3 is not inst
+
+
+def test_node_crash_reroutes_to_coldstart(platform):
+    net, nodes, coord, clock = platform
+    coord.invoke("f")                      # seed on some node
+    rec = coord.seed_store["f"]
+    coord.nodes[rec.node_id].crash()
+    out, inst = coord.invoke("f", node=next(
+        n for n in nodes if n.alive and n.node_id != rec.node_id))
+    assert out["ok"]
+
+
+def test_workflow_fork_state_transfer(platform, hello_cfg, hello_params):
+    net, nodes, coord, clock = platform
+    payload = np.arange(4096, dtype=np.float32)
+
+    def up(inst, ctx):
+        inst.add_tensor("globals/market", jnp.asarray(payload))
+        return {"rows": 1}
+
+    def down(inst, ctx):
+        got = np.asarray(inst.ensure_tensor("globals/market"))
+        np.testing.assert_array_equal(got, payload)
+        return {"sum": float(got.sum())}
+
+    coord.register_function(FunctionDef("up", hello_cfg.name,
+                                        lambda: hello_params, up))
+    coord.register_function(FunctionDef("down", hello_cfg.name,
+                                        lambda: hello_params, down))
+    wf = Workflow("t")
+    wf.add(WorkflowFunc("U", "up"))
+    wf.add(WorkflowFunc("D", "down", fork_from="U"))
+    wf.edge("U", "D")
+    res = run_workflow(coord, wf, {}, transfer="fork", fan_out={"D": 3})
+    assert len(res["D"]) == 3
+    for r in res["D"]:
+        assert r["sum"] == float(payload.sum())
+    # fork tree closed: no dangling short-lived seeds beyond long-lived ones
+    assert not coord.fork_trees
+
+
+def test_workflow_message_baseline(platform, hello_cfg, hello_params):
+    net, nodes, coord, clock = platform
+
+    def up(inst, ctx):
+        return {"data": np.ones(128, np.float32)}
+
+    def down(inst, ctx):
+        assert "msg:U" in ctx
+        return {"got": float(ctx["msg:U"]["data"].sum())}
+
+    coord.register_function(FunctionDef("up", hello_cfg.name,
+                                        lambda: hello_params, up))
+    coord.register_function(FunctionDef("down", hello_cfg.name,
+                                        lambda: hello_params, down))
+    wf = Workflow("m")
+    wf.add(WorkflowFunc("U", "up"))
+    wf.add(WorkflowFunc("D", "down"))
+    wf.edge("U", "D")
+    res = run_workflow(coord, wf, {}, transfer="message")
+    assert res["D"]["got"] == 128.0
+    assert net.meter["msg_bytes"] > 0
+
+
+def test_dangling_seed_gc_by_max_lifetime(platform):
+    net, nodes, coord, clock = platform
+    out, inst = coord.invoke("f")
+    # simulate a short-lived seed left behind by a crashed coordinator
+    hid, key = fork.fork_prepare(inst.node, inst)
+    clock.t = 901.0
+    freed = coord.gc()
+    assert freed["dangling"] >= 1

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) over system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.descriptor import flatten_with_names, unflatten_from_paths
+from repro.core.pagetable import MAX_HOPS, VMA
+from repro.memory import paging
+from repro.memory.pool import PagePool
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 6)), min_size=1,
+                max_size=40))
+def test_pool_never_double_allocates(ops):
+    """Random alloc/free interleavings: live frames are always disjoint."""
+    pool = PagePool(page_elems=64, grow_frames=4)
+    live = []
+    for is_alloc, n in ops:
+        if is_alloc or not live:
+            frames = pool.alloc(jnp.float32, n)
+            flat = [f for fs in live for f in fs]
+            assert set(frames.tolist()).isdisjoint(flat)
+            live.append(frames.tolist())
+        else:
+            pool.free(jnp.float32, live.pop())
+    assert pool.num_allocated(jnp.float32) == sum(len(f) for f in live)
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, 64), st.integers(16, 257))
+def test_paging_roundtrip_any_shape(n, page_elems):
+    page_elems = (page_elems // 16) * 16 or 16
+    x = jnp.arange(n, dtype=jnp.float32)
+    pages = paging.to_pages(x, page_elems)
+    y = paging.from_pages(pages, (n,), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(**SETTINGS)
+@given(st.integers(1, MAX_HOPS))
+def test_hop_chain_keys_consistent(depth):
+    """After d forks, hop h's key is the key minted at ancestor h."""
+    v = VMA.new_local("w", (4,), "float32", np.arange(2, dtype=np.int32))
+    keys = []
+    for d in range(depth):
+        key = 1000 + d
+        keys.append(key)
+        v = v.child_view(key)
+    assert (v.owner_hop == depth).all()
+    # hop h (1=nearest parent) was minted at fork (depth - h)
+    for h in range(1, depth + 1):
+        assert v.dc_keys[h] == keys[depth - h]
+
+
+@settings(**SETTINGS)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=8, unique=True))
+def test_cow_never_touches_parent_frames(pages_to_write):
+    """Child page writes allocate fresh frames, never the parent's."""
+    pool = PagePool(page_elems=32)
+    parent_frames = pool.alloc(jnp.float32, 8)
+    v = VMA.new_local("w", (256,), "float32", parent_frames)
+    c = v.child_view(1)
+    child_frames = pool.alloc(jnp.float32, len(pages_to_write))
+    c.mark_resident(pages_to_write, child_frames)
+    c.mark_dirty(pages_to_write)
+    assert set(c.frames[pages_to_write].tolist()).isdisjoint(
+        set(parent_frames.tolist()))
+    untouched = [p for p in range(8) if p not in pages_to_write]
+    assert (c.frames[untouched] == v.frames[untouched]).all()
+    assert (c.owner_hop[untouched] == 1).all()
+
+
+_tree_strategy = st.recursive(
+    st.integers(0, 3).map(lambda n: jnp.arange(n + 1, dtype=jnp.float32)),
+    lambda children: st.one_of(
+        st.lists(children, min_size=1, max_size=3),
+        st.dictionaries(st.sampled_from(list("abcd")), children, min_size=1,
+                        max_size=3)),
+    max_leaves=8)
+
+
+@settings(**SETTINGS)
+@given(_tree_strategy)
+def test_flatten_unflatten_roundtrip(tree):
+    names, paths, leaves = flatten_with_names(tree)
+    rebuilt = unflatten_from_paths(paths, leaves)
+    a, b = jax.tree.leaves(tree), jax.tree.leaves(rebuilt)
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@settings(**SETTINGS)
+@given(st.integers(0, 10000), st.integers(1, 30), st.integers(0, 3))
+def test_data_stream_is_pure(seed, step, host):
+    from repro.training.data import TokenStream
+    s = TokenStream(512, 8, 16, seed=seed, num_hosts=4, host_id=host)
+    a, _ = s.batch_at(step)
+    b, _ = s.batch_at(step)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 512

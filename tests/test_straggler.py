@@ -1,0 +1,45 @@
+"""Straggler detection + backup-fork mitigation."""
+import jax
+import numpy as np
+
+from repro.core import fork
+from repro.core.instance import ModelInstance
+from repro.core.network import Network
+from repro.models import lm
+from repro.platform.node import NodeRuntime
+from repro.platform.straggler import StragglerMonitor
+
+
+def test_detect_and_backup_fork(hello_cfg, hello_params):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(4)]
+    mon = StragglerMonitor(net, threshold=2.0)
+
+    # healthy workers at ~100 ms/step, node2 degrades to 400 ms
+    for step in range(5):
+        mon.report("node0", 0.1)
+        mon.report("node1", 0.1)
+        mon.report("node2", 0.4)
+    assert mon.stragglers() == ["node2"]
+
+    # worker state lives on node2; its seed was prepared at deploy time
+    worker = ModelInstance.create(nodes[2], hello_cfg.name, hello_params,
+                                  registers={"step": 17})
+    hid, key = fork.fork_prepare(nodes[2], worker)
+    backup = mon.mitigate("node2", nodes[2], hid, key, nodes[3])
+    assert backup.registers["step"] == 17
+    got = backup.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # no double-mitigation while a backup is in flight
+    assert mon.stragglers() == []
+    mon.resolve("node2", winner="node3")
+    assert "node2" not in mon.backups
+
+
+def test_no_false_positives_balanced():
+    mon = StragglerMonitor(None, threshold=2.0)
+    for step in range(5):
+        for n in ("a", "b", "c"):
+            mon.report(n, 0.1 + 0.01 * step)
+    assert mon.stragglers() == []
