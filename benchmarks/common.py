@@ -18,7 +18,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import Network
 from repro.models import lm

@@ -5,7 +5,7 @@ from __future__ import annotations
 from benchmarks.common import (FUNCTIONS, checkpoint_blob, deploy_parent,
                                make_cluster, restore_from_blob, timed,
                                touch_fraction)
-from repro.core import fork
+from repro.fork import ForkPolicy
 
 TOUCH = 0.6
 
@@ -17,10 +17,9 @@ def run():
         parent = deploy_parent(nodes[0], fname)
 
         # MITOSIS
-        tp = timed(net, fork.fork_prepare, nodes[0], parent)
-        hid, key = tp.out
-        ts = timed(net, fork.fork_resume, nodes[1], "node0", hid, key,
-                   prefetch=1)
+        tp = timed(net, nodes[0].prepare_fork, parent)
+        handle = tp.out
+        ts = timed(net, handle.resume_on, nodes[1], ForkPolicy(prefetch=1))
         te = timed(net, touch_fraction, ts.out, TOUCH, 1)
         rows.append(dict(
             name=f"fig12.mitosis.{fname}",
@@ -29,7 +28,8 @@ def run():
             startup_us=int(ts.wall_s * 1e6),
             exec_us=int(te.wall_s * 1e6),
             exec_sim_us=int(te.sim_s * 1e6),
-            descriptor_kb=round(len(nodes[0].seeds[hid].blob) / 1024, 1)))
+            descriptor_kb=round(
+                len(nodes[0].seeds[handle.handler_id].blob) / 1024, 1)))
 
         # CRIU-local: checkpoint + full file copy + restore
         tc = timed(net, checkpoint_blob, parent)

@@ -3,7 +3,7 @@ vs runtime (colored), per technique, amortized per machine (m=4)."""
 from __future__ import annotations
 
 from benchmarks.common import FUNCTIONS, deploy_parent, make_cluster, touch_fraction
-from repro.core import fork
+from repro.fork import ForkPolicy
 
 TOUCH = 0.6
 M = 4  # machines
@@ -21,9 +21,9 @@ def run():
         # MITOSIS: ONE seed across the cluster
         net, nodes = make_cluster(M)
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
+        handle = nodes[0].prepare_fork(parent)
         mit_prov = sum(nd.memory_bytes() for nd in nodes) / M
-        kids = [fork.fork_resume(nd, "node0", hid, key, prefetch=1)
+        kids = [handle.resume_on(nd, ForkPolicy(prefetch=1))
                 for nd in nodes[1:]]
         for k in kids:
             touch_fraction(k, TOUCH, 1)

@@ -3,7 +3,7 @@ single seed — parent NIC bandwidth vs child CPU vs RPC handlers."""
 from __future__ import annotations
 
 from benchmarks.common import FUNCTIONS, deploy_parent, make_cluster, timed, touch_fraction
-from repro.core import fork
+from repro.fork import ForkPolicy
 
 TOUCH = 0.6
 K = 6  # forks measured
@@ -14,11 +14,11 @@ def run():
     for fname in FUNCTIONS:
         net, nodes = make_cluster(3)
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
+        handle = nodes[0].prepare_fork(parent)
         net.reset_meter()
         t = timed(net, lambda: [
-            touch_fraction(fork.fork_resume(nodes[1 + i % 2], "node0", hid, key,
-                                            prefetch=1), TOUCH, 1)
+            touch_fraction(handle.resume_on(nodes[1 + i % 2],
+                                            ForkPolicy(prefetch=1)), TOUCH, 1)
             for i in range(K)])
         bytes_per_fork = net.meter["rdma_bytes"] / K
         # bottleneck model (paper §7.2): parent NIC serves rdma_bw

@@ -2,7 +2,6 @@
 from __future__ import annotations
 
 from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
-from repro.core import fork
 
 FN = "image"
 TOUCH = 0.6
@@ -13,8 +12,8 @@ def run():
     for prefetch in (0, 1, 2, 6):
         net, nodes = make_cluster(2)
         parent = deploy_parent(nodes[0], FN)
-        hid, key = fork.fork_prepare(nodes[0], parent)
-        child = fork.fork_resume(nodes[1], "node0", hid, key)
+        handle = nodes[0].prepare_fork(parent)
+        child = handle.resume_on(nodes[1])
         net.reset_meter()
         t = timed(net, touch_fraction, child, TOUCH, prefetch)
         rows.append(dict(

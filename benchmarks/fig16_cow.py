@@ -3,7 +3,7 @@ latency and throughput across touch ratios."""
 from __future__ import annotations
 
 from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
-from repro.core import fork
+from repro.fork import ForkPolicy
 
 FN = "image"
 
@@ -14,17 +14,17 @@ def run():
         # COW / lazy
         net, nodes = make_cluster(2)
         parent = deploy_parent(nodes[0], FN)
-        hid, key = fork.fork_prepare(nodes[0], parent)
+        handle = nodes[0].prepare_fork(parent)
         t_lazy = timed(net, lambda: touch_fraction(
-            fork.fork_resume(nodes[1], "node0", hid, key), ratio, 1))
+            handle.resume_on(nodes[1]), ratio, 1))
         lazy_bytes = net.meter["rdma_bytes"]
 
         # non-COW / eager
         net2, nodes2 = make_cluster(2)
         parent2 = deploy_parent(nodes2[0], FN)
-        hid2, key2 = fork.fork_prepare(nodes2[0], parent2)
-        t_eager = timed(net2, lambda: fork.fork_resume(
-            nodes2[1], "node0", hid2, key2, lazy=False))
+        handle2 = nodes2[0].prepare_fork(parent2)
+        t_eager = timed(net2, lambda: handle2.resume_on(
+            nodes2[1], ForkPolicy(lazy=False)))
         eager_bytes = net2.meter["rdma_bytes"]
 
         rows.append(dict(

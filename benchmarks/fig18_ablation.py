@@ -6,15 +6,15 @@ import time
 
 from benchmarks.common import (checkpoint_blob, deploy_parent, make_cluster,
                                restore_from_blob, timed, touch_fraction)
-from repro.core import fork
 from repro.core.lean import LeanExecutorPool
+from repro.fork import ForkPolicy
 
 TOUCH = 0.6
 
 
-def _fork_exec(net, nodes, hid, key, *, dfetch, lazy, prefetch):
-    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=lazy,
-                             descriptor_fetch=dfetch, prefetch=prefetch)
+def _fork_exec(net, nodes, handle, *, dfetch, lazy, prefetch):
+    child = handle.resume_on(nodes[1], ForkPolicy(
+        lazy=lazy, descriptor_fetch=dfetch, prefetch=prefetch))
     touch_fraction(child, TOUCH, prefetch)
     return child
 
@@ -28,8 +28,8 @@ def run():
 
         net, nodes = make_cluster(2, transport="rc")
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
-        t0 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rpc",
+        handle = nodes[0].prepare_fork(parent)
+        t0 = timed(net, _fork_exec, net, nodes, handle, dfetch="rpc",
                    lazy=False, prefetch=0)
         base = t0.wall_s + lean_cold_s
         rows.append(dict(name=f"fig18.baseline.{fname}",
@@ -44,8 +44,8 @@ def run():
         # +FD: descriptor over one-sided read instead of RPC
         net, nodes = make_cluster(2, transport="rc")
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
-        t1 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+        handle = nodes[0].prepare_fork(parent)
+        t1 = timed(net, _fork_exec, net, nodes, handle, dfetch="rdma",
                    lazy=False, prefetch=0)
         rows.append(dict(name=f"fig18.+FD.{fname}",
                          us_per_call=int(t1.wall_s * 1e6),
@@ -54,8 +54,8 @@ def run():
         # +DCT: connectionless transport (RC pays per-connection setup)
         net, nodes = make_cluster(2, transport="dct")
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
-        t2 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+        handle = nodes[0].prepare_fork(parent)
+        t2 = timed(net, _fork_exec, net, nodes, handle, dfetch="rdma",
                    lazy=False, prefetch=0)
         rows.append(dict(name=f"fig18.+DCT.{fname}",
                          us_per_call=int(t2.wall_s * 1e6),
@@ -64,8 +64,8 @@ def run():
         # +nocopy: map pages lazily instead of eager full copy
         net, nodes = make_cluster(2, transport="dct")
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
-        t3 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+        handle = nodes[0].prepare_fork(parent)
+        t3 = timed(net, _fork_exec, net, nodes, handle, dfetch="rdma",
                    lazy=True, prefetch=0)
         rows.append(dict(name=f"fig18.+nocopy.{fname}",
                          us_per_call=int(t3.wall_s * 1e6),
@@ -74,8 +74,8 @@ def run():
         # +prefetch
         net, nodes = make_cluster(2, transport="dct")
         parent = deploy_parent(nodes[0], fname)
-        hid, key = fork.fork_prepare(nodes[0], parent)
-        t4 = timed(net, _fork_exec, net, nodes, hid, key, dfetch="rdma",
+        handle = nodes[0].prepare_fork(parent)
+        t4 = timed(net, _fork_exec, net, nodes, handle, dfetch="rdma",
                    lazy=True, prefetch=1)
         rows.append(dict(name=f"fig18.+prefetch.{fname}",
                          us_per_call=int(t4.wall_s * 1e6),

@@ -10,8 +10,8 @@ import numpy as np
 
 from benchmarks.common import deploy_parent, make_cluster, timed
 from repro.configs.base import get_arch
-from repro.core import fork
 from repro.core.instance import ModelInstance
+from repro.fork import ForkPolicy
 from repro.models import lm
 from repro.platform.coordinator import Coordinator, FunctionDef
 from repro.platform.workflow import Workflow, WorkflowFunc, run_workflow
@@ -28,9 +28,9 @@ def run():
         net, nodes = make_cluster(2)
         up = deploy_parent(nodes[0], "hello")
         up.add_tensor("globals/data", jnp.asarray(payload))
-        hid, key = fork.fork_prepare(nodes[0], up)
+        handle = nodes[0].prepare_fork(up)
         t_fork = timed(net, lambda: np.asarray(
-            fork.fork_resume(nodes[1], "node0", hid, key, prefetch=1)
+            handle.resume_on(nodes[1], ForkPolicy(prefetch=1))
             .ensure_tensor("globals/data")))
         np.testing.assert_allclose(t_fork.out, payload)
 

@@ -5,7 +5,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
-from repro.core import fork
 
 FN = "json"
 EXEC_S = 0.030            # modeled function body
@@ -19,7 +18,7 @@ def run():
     for policy in ("mitosis", "caching", "coldstart"):
         net, nodes = make_cluster(4)
         parent = deploy_parent(nodes[0], FN)
-        hid, key = fork.fork_prepare(nodes[0], parent)
+        nodes[0].prepare_fork(parent)       # the one provisioned seed
         state_b = parent.total_bytes()
         cold_s = 0.167                      # paper: 167 ms local coldstart
         cache: list = []                    # expiry minutes of idle containers

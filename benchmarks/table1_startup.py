@@ -9,7 +9,7 @@ import numpy as np
 from benchmarks.common import (checkpoint_blob, deploy_parent, make_cluster,
                                params_for, restore_from_blob, timed,
                                touch_fraction)
-from repro.core import fork
+from repro.fork import ForkPolicy
 
 FN = "json"
 TOUCH = 0.6
@@ -20,7 +20,7 @@ def run():
     net, nodes = make_cluster(3)
     parent = deploy_parent(nodes[0], FN)
     state_b = parent.total_bytes()
-    hid, key = fork.fork_prepare(nodes[0], parent)
+    handle = nodes[0].prepare_fork(parent)
 
     # --- coldstart (local image): build params + instance from scratch
     t = timed(net, lambda: deploy_parent(nodes[1], FN))
@@ -34,7 +34,7 @@ def run():
     cache_lat = 5e-4
 
     # --- local fork
-    t = timed(net, lambda: fork.fork_resume(nodes[0], "node0", hid, key))
+    t = timed(net, lambda: handle.resume_on(nodes[0]))
     lf = t
     touch_t = timed(net, touch_fraction, lf.out, TOUCH)
 
@@ -45,8 +45,7 @@ def run():
     tr = timed(net, restore_from_blob, nodes[2], parent.arch, blob)
 
     # --- MITOSIS remote fork
-    tm = timed(net, lambda: fork.fork_resume(nodes[2], "node0", hid, key,
-                                             prefetch=1))
+    tm = timed(net, lambda: handle.resume_on(nodes[2], ForkPolicy(prefetch=1)))
     child = tm.out
     tmt = timed(net, touch_fraction, child, TOUCH, 1)
 
@@ -67,5 +66,5 @@ def run():
                      sim_us=int((tm.sim_s + tmt.sim_s) * 1e6),
                      exec_touch_us=int(tmt.wall_s * 1e6), provisioned="O(1)",
                      state_bytes=state_b,
-                     descriptor_bytes=len(nodes[0].seeds[hid].blob)))
+                     descriptor_bytes=len(nodes[0].seeds[handle.handler_id].blob)))
     return rows

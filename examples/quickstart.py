@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import Network
+from repro.fork import ForkPolicy
 from repro.models import lm
 from repro.platform.node import NodeRuntime
 from repro.serving.engine import ServingEngine
@@ -30,15 +30,14 @@ def main():
     # 1. one seed replica — the only provisioned instance in the cluster
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     seed = ModelInstance.create(parent_node, cfg.name, params)
-    handler_id, auth_key = fork.fork_prepare(parent_node, seed)
+    handle = parent_node.prepare_fork(seed)
     print(f"seed: {seed.total_bytes()/2**20:.1f} MiB state, descriptor = "
-          f"{len(parent_node.seeds[handler_id].blob)} bytes")
+          f"{len(parent_node.seeds[handle.handler_id].blob)} bytes")
 
     # 2. remote fork: child maps the parent's pages, fetches on demand
     t0 = time.perf_counter()
-    child = fork.fork_resume(child_node, "parent", handler_id, auth_key,
-                             lazy=True, prefetch=1)
-    print(f"fork_resume: {(time.perf_counter()-t0)*1e3:.1f} ms "
+    child = handle.resume_on(child_node, ForkPolicy(lazy=True, prefetch=1))
+    print(f"resume_on: {(time.perf_counter()-t0)*1e3:.1f} ms "
           f"(resident: {child.resident_fraction():.0%})")
 
     child_params = child.materialize_pytree()

@@ -20,9 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch, reduce_for_smoke
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import Network
+from repro.fork import ForkPolicy
 from repro.distributed import ctx
 from repro.distributed.sharding import make_axis_env, params_shardings
 from repro.models import lm
@@ -111,14 +111,14 @@ def main():
     inst = ModelInstance.create(donor, cfg.name, state,
                                 registers={"step": 2 * args.steps // 3,
                                            "count": int(opt["count"])})
-    hid, key = fork.fork_prepare(donor, inst)
+    handle = donor.prepare_fork(inst)
     t0 = time.perf_counter()
-    child = fork.fork_resume(joiner, "donor", hid, key, lazy=True, prefetch=1)
+    child = handle.resume_on(joiner, ForkPolicy(lazy=True, prefetch=1))
     got = child.materialize_pytree()
     dt = time.perf_counter() - t0
     print(f"[elastic] worker joined via remote fork in {dt*1e3:.0f} ms "
-          f"({child.stats['pages_rdma']} pages, "
-          f"descriptor {len(donor.seeds[hid].blob)} B — no checkpoint read)")
+          f"({child.stats['pages_rdma']} pages, descriptor "
+          f"{len(donor.seeds[handle.handler_id].blob)} B — no checkpoint read)")
 
     mesh4 = make_mesh(4)
     env4 = make_axis_env(mesh4)

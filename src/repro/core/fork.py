@@ -1,93 +1,55 @@
-"""The remote-fork primitive: fork_prepare / fork_resume / fork_reclaim
-(paper Figure 7 API).
+"""DEPRECATED tuple-based fork API — thin shims over ``repro.fork``.
 
-fork_prepare : build the KB-sized descriptor (page tables + registers, NO
-               memory copy), assign one DC key per VMA from the pooled
-               targets, register under (handler_id, auth_key).
-fork_resume  : authentication RPC -> one-sided descriptor fetch ->
-               child page tables via child_view -> (optionally) on-demand
-               lazy paging thereafter.
-fork_reclaim : destroy the seed's DC targets; subsequent child reads are
-               rejected by the RNIC-analogue and surface as AccessRevoked.
+The paper-Figure-7 primitives used to live here, exposing seeds as raw
+``(handler_id, auth_key)`` int tuples.  The control plane is now the
+capability-style ``repro.fork`` package:
+
+    handle = node.prepare_fork(instance, lease=...)   # ForkHandle
+    child  = handle.resume_on(child_node, ForkPolicy(lazy=True, prefetch=1))
+    handle.reclaim()                                  # or `with handle: ...`
+
+These shims delegate to the ForkHandle path (identical wire behavior and
+page-fault stats) and emit DeprecationWarning; they will be removed one
+release after the migration (see docs/fork_api.md for the mapping).
 """
 from __future__ import annotations
 
-import time
-from typing import Optional, Tuple
+import math
+import warnings
+from typing import Tuple
 
-from repro.core.descriptor import Descriptor
+from repro.fork.handle import ForkHandle
+from repro.fork.policy import ForkPolicy
 from repro.core.instance import ModelInstance
-from repro.core.pagetable import VMA
-from repro.platform.node import NodeRuntime, SeedEntry, make_auth_key
+from repro.platform.node import NodeRuntime
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(f"{old} is deprecated; use {new} (see docs/fork_api.md)",
+                  DeprecationWarning, stacklevel=3)
 
 
 def fork_prepare(node: NodeRuntime, instance: ModelInstance) -> Tuple[int, int]:
-    handler_id = next(node._hid)
-    auth_key = make_auth_key()
-    prepared_keys = {name: node.take_dc_target() for name in instance.aspace}
-    desc = Descriptor(
-        arch=instance.arch,
-        kind=instance.kind,
-        parent_node=node.node_id,
-        handler_id=handler_id,
-        ancestry=list(instance.ancestry),
-        leaf_paths=instance.leaf_paths,
-        vmas=[v.table_dict() for v in instance.aspace.values()],
-        registers=dict(instance.registers),
-        extra={"prepared_keys": prepared_keys,
-               "leaf_names": list(instance.leaf_names)},
-    )
-    blob = desc.to_bytes()
-    node.register_seed(handler_id, SeedEntry(
-        descriptor=desc, blob=blob, auth_key=auth_key, instance=instance,
-        keys=prepared_keys, created=node.clock()))
-    return handler_id, auth_key
+    """Deprecated: use ``node.prepare_fork(instance, lease=...)``."""
+    _deprecated("fork_prepare", "NodeRuntime.prepare_fork")
+    handle = node.prepare_fork(instance)
+    return handle.handler_id, handle.auth_key
 
 
 def fork_resume(child_node: NodeRuntime, parent_node_id: str, handler_id: int,
                 auth_key: int, *, lazy: bool = True, prefetch: int = 0,
                 descriptor_fetch: str = "rdma") -> ModelInstance:
-    net = child_node.network
-    if parent_node_id not in net.nodes:
-        raise ConnectionError(f"parent {parent_node_id} is down")
-    parent = net.nodes[parent_node_id]
-
-    # 1) authentication RPC (malformed ids/keys rejected here, §5.2)
-    info = net.rpc(child_node.node_id, parent_node_id, 64,
-                   parent.auth_seed, handler_id, auth_key)
-
-    # 2) descriptor fetch: one one-sided READ (fast path) or RPC (ablation)
-    if descriptor_fetch == "rdma":
-        net.rdma_read_blob(child_node.node_id, parent_node_id, info["nbytes"])
-        blob = parent.seed_blob(handler_id)
-    else:
-        blob = net.rpc(child_node.node_id, parent_node_id, info["nbytes"],
-                       parent.seed_blob, handler_id)
-    desc = Descriptor.from_bytes(blob)
-
-    # 3) child address space: page tables shifted one hop up
-    prepared = desc.extra["prepared_keys"]
-    aspace = {}
-    for vd in desc.vmas:
-        vma = VMA.from_table_dict(vd)
-        aspace[vma.name] = vma.child_view(prepared[vma.name])
-    ancestry = [parent_node_id] + list(desc.ancestry)
-
-    inst = ModelInstance(child_node, desc.arch, desc.kind, aspace,
-                         desc.leaf_paths, desc.extra["leaf_names"],
-                         ancestry, dict(desc.registers))
-    if not lazy:
-        inst.ensure_all(prefetch=0)
-    inst.default_prefetch = prefetch
-    return inst
+    """Deprecated: use ``ForkHandle.resume_on(child_node, ForkPolicy(...))``."""
+    _deprecated("fork_resume", "ForkHandle.resume_on")
+    handle = ForkHandle(parent_node=parent_node_id, handler_id=handler_id,
+                        auth_key=auth_key, lease_deadline=math.inf,
+                        generation=0)
+    return handle.resume_on(child_node, ForkPolicy(
+        lazy=lazy, prefetch=prefetch, descriptor_fetch=descriptor_fetch))
 
 
 def fork_reclaim(node: NodeRuntime, handler_id: int,
                  free_instance: bool = False) -> None:
-    entry = node.seeds.pop(handler_id, None)
-    if entry is None:
-        return
-    for key in entry.keys.values():
-        node.network.destroy_dc_target(node.node_id, key)
-    if free_instance and entry.instance is not None:
-        entry.instance.free()
+    """Deprecated: use ``ForkHandle.reclaim()`` / ``NodeRuntime.reclaim_seed``."""
+    _deprecated("fork_reclaim", "ForkHandle.reclaim")
+    node.reclaim_seed(handler_id, free_instance=free_instance)

@@ -1,0 +1,58 @@
+"""ForkPolicy — one validated object for every resume-time knob.
+
+Replaces the four kwargs (``lazy``, ``prefetch``, ``descriptor_fetch`` and
+the node-level sibling-cache flag) that callers used to re-thread by hand.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+DESCRIPTOR_FETCH_MODES = ("rdma", "rpc")
+
+
+@dataclasses.dataclass(frozen=True)
+class ForkPolicy:
+    """How a child resumes from a seed.
+
+    lazy             : map pages on demand (COW) instead of eager full copy
+    prefetch         : adjacent pages pulled per fault (0 = none)
+    descriptor_fetch : "rdma" one-sided read (fast path) | "rpc" (ablation)
+    sibling_cache    : True/False toggles the child node's sibling page
+                       cache for this and later forks; None keeps the
+                       node's current setting
+    """
+
+    lazy: bool = True
+    prefetch: int = 0
+    descriptor_fetch: str = "rdma"
+    sibling_cache: Optional[bool] = None
+
+    def __post_init__(self):
+        self.validate()
+
+    def validate(self) -> "ForkPolicy":
+        if not isinstance(self.lazy, bool):
+            raise ValueError(f"lazy must be a bool, got {self.lazy!r}")
+        if not isinstance(self.prefetch, int) or isinstance(self.prefetch, bool) \
+                or self.prefetch < 0:
+            raise ValueError(f"prefetch must be an int >= 0, got {self.prefetch!r}")
+        if self.descriptor_fetch not in DESCRIPTOR_FETCH_MODES:
+            raise ValueError(
+                f"descriptor_fetch must be one of {DESCRIPTOR_FETCH_MODES}, "
+                f"got {self.descriptor_fetch!r}")
+        if self.sibling_cache is not None and not isinstance(self.sibling_cache, bool):
+            raise ValueError(
+                f"sibling_cache must be None or a bool, got {self.sibling_cache!r}")
+        return self
+
+    @classmethod
+    def coerce(cls, policy=None) -> "ForkPolicy":
+        """Accept None (defaults), a ForkPolicy, or a kwargs dict."""
+        if policy is None:
+            return cls()
+        if isinstance(policy, cls):
+            return policy
+        if isinstance(policy, dict):
+            return cls(**policy)
+        raise TypeError(f"cannot build a ForkPolicy from {policy!r}")

@@ -14,9 +14,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import get_arch
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import Network
+from repro.fork import ForkPolicy
 from repro.models import lm
 from repro.platform.node import NodeRuntime
 from repro.serving.engine import ServingEngine
@@ -39,15 +39,16 @@ def main(argv=None):
     # Seed replica on node0 — the single provisioned instance (O(1))
     params = lm.init_params(jax.random.PRNGKey(0), cfg)
     seed_inst = ModelInstance.create(nodes[0], cfg.name, params)
-    hid, key = fork.fork_prepare(nodes[0], seed_inst)
+    handle = nodes[0].prepare_fork(seed_inst)
     print(f"[serve] seed on node0: {seed_inst.total_bytes()/2**20:.1f} MiB, "
-          f"descriptor {len(nodes[0].seeds[hid].blob)/1024:.1f} KiB")
+          f"descriptor {len(nodes[0].seeds[handle.handler_id].blob)/1024:.1f} KiB")
 
     # Scale out: each remaining node forks the seed and serves
+    policy = ForkPolicy(lazy=True, prefetch=1)
     engines = []
     for node in nodes[1:]:
         t0 = time.perf_counter()
-        child = fork.fork_resume(node, "node0", hid, key, lazy=True, prefetch=1)
+        child = handle.resume_on(node, policy)
         child_params = child.materialize_pytree()
         dt = time.perf_counter() - t0
         print(f"[serve] {node.node_id}: forked replica in {dt*1e3:.1f} ms "

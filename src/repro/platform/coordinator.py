@@ -5,6 +5,10 @@ management, fork trees, timeout GC, and startup-policy dispatch.
 schedules them onto invoker nodes, accelerating startup via long-lived seeds
 and state transfer via short-lived seeds, exactly mirroring the paper's Fn
 integration.
+
+The seed store holds leased ``ForkHandle`` capabilities (repro.fork): lease
+freshness, renewal and reclamation all go through the handle instead of the
+old raw (handler_id, auth_key) SeedRecord tuples.
 """
 from __future__ import annotations
 
@@ -14,8 +18,8 @@ from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
-from repro.core import fork
 from repro.core.instance import ModelInstance
+from repro.fork import ForkHandle, ForkPolicy
 from repro.platform.node import NodeRuntime
 
 DEFAULT_SEED_KEEPALIVE = 600.0      # §6.2: 10 min vs caching's 1 min
@@ -33,21 +37,10 @@ class FunctionDef:
 
 
 @dataclasses.dataclass
-class SeedRecord:
-    func: str
-    node_id: str
-    handler_id: int
-    auth_key: int
-    created: float
-    keep_alive: float
-    long_lived: bool
-
-
-@dataclasses.dataclass
 class ForkTreeNode:
     func: str
     node_id: str
-    handler_id: Optional[int]
+    handle: Optional[ForkHandle]
     children: List["ForkTreeNode"] = dataclasses.field(default_factory=list)
 
 
@@ -57,7 +50,7 @@ class Coordinator:
         self.nodes = {n.node_id: n for n in nodes}
         self.clock = clock
         self.functions: Dict[str, FunctionDef] = {}
-        self.seed_store: Dict[str, SeedRecord] = {}
+        self.seed_store: Dict[str, ForkHandle] = {}    # func -> leased handle
         self.fork_trees: Dict[str, ForkTreeNode] = {}
         self.cached: Dict[str, List[tuple]] = {}       # func -> [(inst, ts)]
         self._rr = 0
@@ -69,6 +62,8 @@ class Coordinator:
 
     def pick_node(self, exclude=()) -> NodeRuntime:
         ids = [i for i in self.nodes if self.nodes[i].alive and i not in exclude]
+        if not ids:
+            raise RuntimeError("no live nodes")
         node = self.nodes[ids[self._rr % len(ids)]]
         self._rr += 1
         return node
@@ -87,18 +82,15 @@ class Coordinator:
     def deploy_seed(self, func: str, node: NodeRuntime,
                     instance: Optional[ModelInstance] = None,
                     long_lived: bool = True,
-                    keep_alive: float = DEFAULT_SEED_KEEPALIVE) -> SeedRecord:
+                    keep_alive: float = DEFAULT_SEED_KEEPALIVE) -> ForkHandle:
         fdef = self.functions[func]
         if instance is None:
             instance = ModelInstance.create(node, fdef.arch, fdef.make_params(),
                                             kind="weights")
-        hid, key = fork.fork_prepare(node, instance)
-        rec = SeedRecord(func=func, node_id=node.node_id, handler_id=hid,
-                         auth_key=key, created=self.clock(),
-                         keep_alive=keep_alive, long_lived=long_lived)
+        handle = node.prepare_fork(instance, lease=keep_alive)
         if long_lived:
-            self.seed_store[func] = rec
-        return rec
+            self.seed_store[func] = handle
+        return handle
 
     def acquire_instance(self, func: str, *, node: Optional[NodeRuntime] = None,
                          policy: str = "fork", lazy: bool = True,
@@ -115,11 +107,10 @@ class Coordinator:
                     inst = pool.pop(i)[0]
                     break
         if inst is None and policy == "fork":
-            rec = self.seed_store.get(func)
-            if rec is not None and self._seed_fresh(rec):
-                inst = fork.fork_resume(node, rec.node_id, rec.handler_id,
-                                        rec.auth_key, lazy=lazy,
-                                        prefetch=prefetch)
+            handle = self.seed_store.get(func)
+            if handle is not None and self._seed_fresh(handle):
+                inst = handle.resume_on(node, ForkPolicy(lazy=lazy,
+                                                         prefetch=prefetch))
         if inst is None:
             inst = self.coldstart(func, node)
         return inst
@@ -135,34 +126,49 @@ class Coordinator:
 
     def release(self, func: str, inst: ModelInstance, policy: str) -> None:
         """Post-execution: caching keeps the container; fork frees the child
-        (§6.2: children are never cached)."""
+        (§6.2: children are never cached).  An instance pinned as the
+        platform seed is NOT freed here — the seed store owns it until its
+        lease expires (coldstart registers the first container as seed, and
+        freeing it would yank the live seed out from under later forks)."""
         if policy == "cache":
             self.cached.setdefault(func, []).append((inst, self.clock()))
-        else:
+        elif not self._pinned_as_seed(inst):
             inst.free()
+
+    def _pinned_as_seed(self, inst: ModelInstance) -> bool:
+        for handle in self.seed_store.values():
+            node = self.nodes.get(handle.parent_node)
+            entry = node.seeds.get(handle.handler_id) if node is not None else None
+            if entry is not None and entry.instance is inst:
+                return True
+        return False
 
     # -- lifecycle / GC -------------------------------------------------------
 
-    def _seed_fresh(self, rec: SeedRecord) -> bool:
-        if rec.node_id not in self.network.nodes:
-            return False
-        return self.clock() - rec.created < rec.keep_alive
+    def _seed_fresh(self, handle: ForkHandle) -> bool:
+        # alive: the node-side dangling-seed GC may have reclaimed the seed
+        # (MAX_FUNCTION_LIFETIME) while the store still holds the handle —
+        # treat that as stale so invokes fall back to coldstart.
+        return (handle.parent_node in self.network.nodes
+                and handle.alive and not handle.expired)
 
     def renew_seed(self, func: str) -> None:
-        rec = self.seed_store.get(func)
-        if rec:
-            rec.created = self.clock()
+        handle = self.seed_store.get(func)
+        if handle is None:
+            return
+        if not handle.alive:
+            del self.seed_store[func]       # reclaimed underneath the store
+            return
+        handle.renew()
 
     def gc(self) -> dict:
         """Timeout-based reclamation: expired long-lived seeds, stale cached
         containers, and node-side dangling short-lived seeds (§6.3)."""
         now = self.clock()
         freed = {"seeds": 0, "cached": 0, "dangling": 0}
-        for func, rec in list(self.seed_store.items()):
-            if now - rec.created >= rec.keep_alive:
-                node = self.nodes.get(rec.node_id)
-                if node is not None:
-                    fork.fork_reclaim(node, rec.handler_id, free_instance=True)
+        for func, handle in list(self.seed_store.items()):
+            if handle.expired or not handle.alive:
+                handle.reclaim(free_instance=True)   # no-op if already gone
                 del self.seed_store[func]
                 freed["seeds"] += 1
         for func, pool in self.cached.items():
@@ -178,7 +184,7 @@ class Coordinator:
         for node in self.nodes.values():
             for hid, entry in list(node.seeds.items()):
                 if now - entry.created >= MAX_FUNCTION_LIFETIME:
-                    fork.fork_reclaim(node, hid, free_instance=False)
+                    node.reclaim_seed(hid, free_instance=False)
                     freed["dangling"] += 1
         return freed
 
@@ -196,10 +202,8 @@ class Coordinator:
         def walk(n: ForkTreeNode, is_root: bool):
             for c in n.children:
                 walk(c, False)
-            if not is_root and n.handler_id is not None:
-                node = self.nodes.get(n.node_id)
-                if node is not None:
-                    fork.fork_reclaim(node, n.handler_id, free_instance=False)
+            if not is_root and n.handle is not None:
+                n.handle.reclaim()
 
         walk(root, True)
 

@@ -8,30 +8,41 @@ access control).
 from __future__ import annotations
 
 import itertools
+import math
 import secrets
 import time
+from collections import OrderedDict
 from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.network import AccessRevoked, LeaseExpired
 from repro.memory.pool import PAGE_ELEMS, PagePool
+
+DEFAULT_PAGE_CACHE_CAP = 65536     # sibling-cache entries (pages), LRU-bounded
 
 
 class SeedEntry:
-    def __init__(self, descriptor, blob, auth_key, instance, keys, created):
+    def __init__(self, descriptor, blob, auth_key, instance, keys, created,
+                 lease_deadline: float = math.inf,
+                 lease_duration: Optional[float] = None, generation: int = 0):
         self.descriptor = descriptor
         self.blob = blob
         self.auth_key = auth_key
         self.instance = instance
         self.keys = keys                  # vma name -> DC key
         self.created = created
+        self.lease_deadline = lease_deadline   # absolute (this node's clock)
+        self.lease_duration = lease_duration   # seconds; None = unbounded
+        self.generation = generation           # bumped by revoke_seed
         self.forks = 0
 
 
 class NodeRuntime:
     def __init__(self, node_id: str, network, page_elems: int = PAGE_ELEMS,
-                 cache_enabled: bool = False, clock=time.monotonic):
+                 cache_enabled: bool = False, clock=time.monotonic,
+                 page_cache_cap: int = DEFAULT_PAGE_CACHE_CAP):
         self.node_id = node_id
         self.network = network
         self.pool = PagePool(page_elems)
@@ -39,8 +50,9 @@ class NodeRuntime:
         self.instances: Dict[int, "object"] = {}
         self.seeds: Dict[int, SeedEntry] = {}
         self.cache_enabled = cache_enabled
-        self._page_cache: Dict[tuple, int] = {}
-        self._page_cache_frames: list = []
+        self._page_cache: "OrderedDict[tuple, int]" = OrderedDict()
+        self.page_cache_cap = page_cache_cap
+        self.page_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
         self._dc_pool: list = []
         self._swapped: Dict[tuple, np.ndarray] = {}
         self._iid = itertools.count()
@@ -64,16 +76,71 @@ class NodeRuntime:
 
     # -- seed registry ---------------------------------------------------------
 
+    def prepare_fork(self, instance, lease: Optional[float] = None):
+        """Prepare ``instance`` as a seed and mint its leased capability
+        (``ForkHandle``).  ``lease`` is a duration in seconds; None means
+        unbounded.  The handle is a context manager (reclaim on exit)."""
+        from repro.fork.handle import prepare_fork as _prepare
+        return _prepare(self, instance, lease=lease)
+
     def register_seed(self, handler_id: int, entry: SeedEntry) -> None:
         self.seeds[handler_id] = entry
 
-    def auth_seed(self, handler_id: int, auth_key: int) -> dict:
-        """Authentication RPC (§5.2): validates the id/key, returns the
-        descriptor's address+size for the follow-up one-sided read."""
+    def auth_seed(self, handler_id: int, auth_key: int,
+                  generation: int = 0) -> dict:
+        """Authentication RPC (§5.2 + rFaaS leases): validates the id/key,
+        the handle's revocation generation and the lease deadline, then
+        returns the descriptor's size for the follow-up one-sided read."""
         e = self.seeds.get(handler_id)
         if e is None or e.auth_key != auth_key:
             raise PermissionError(f"bad seed credentials for {handler_id}")
+        if generation != e.generation:
+            raise AccessRevoked(
+                f"seed {handler_id}: handle generation {generation} revoked "
+                f"(current {e.generation})")
+        if self.clock() >= e.lease_deadline:
+            raise LeaseExpired(
+                f"seed {handler_id}: lease expired at {e.lease_deadline:.3f}")
+        e.forks += 1
         return {"nbytes": len(e.blob)}
+
+    def renew_seed(self, handler_id: int,
+                   extend: Optional[float] = None) -> float:
+        """Extend a seed's lease by ``extend`` seconds (default: its
+        original lease duration) and refresh its creation stamp (renewal is
+        a keepalive).  Returns the new absolute deadline."""
+        if extend is not None and extend <= 0:
+            raise ValueError(
+                f"extend must be positive seconds or None, got {extend!r}")
+        e = self.seeds.get(handler_id)
+        if e is None:
+            raise KeyError(f"seed {handler_id} is not registered "
+                           "(already reclaimed?)")
+        duration = extend if extend is not None else e.lease_duration
+        now = self.clock()
+        e.created = now
+        e.lease_deadline = math.inf if duration is None else now + duration
+        return e.lease_deadline
+
+    def revoke_seed(self, handler_id: int) -> int:
+        """Bump the seed's revocation generation: every outstanding handle
+        (and legacy tuple credential) dies at the next auth.  Returns the
+        new generation."""
+        e = self.seeds[handler_id]
+        e.generation += 1
+        return e.generation
+
+    def reclaim_seed(self, handler_id: int,
+                     free_instance: bool = False) -> None:
+        """Destroy the seed's DC targets and unregister it (idempotent);
+        in-flight children fall back to the RPC daemon while pages live."""
+        entry = self.seeds.pop(handler_id, None)
+        if entry is None:
+            return
+        for key in entry.keys.values():
+            self.network.destroy_dc_target(self.node_id, key)
+        if free_instance and entry.instance is not None:
+            entry.instance.free()
 
     def seed_blob(self, handler_id: int) -> bytes:
         return self.seeds[handler_id].blob
@@ -107,16 +174,31 @@ class NodeRuntime:
                 self.network.destroy_dc_target(self.node_id, e.keys[name])
 
     # -- sibling page cache (MITOSIS+cache, §5.4 optimizations) -------------------
+    # LRU-bounded at page_cache_cap entries so a long-lived node can't grow
+    # the remote->local frame map without limit; evictions only forget the
+    # mapping (the frames stay owned by whichever instance fetched them).
 
     def page_cache_get(self, owner: str, dtype: str, frame: int) -> Optional[int]:
         if not self.cache_enabled:
             return None
-        return self._page_cache.get((owner, jnp.dtype(dtype).name, int(frame)))
+        key = (owner, jnp.dtype(dtype).name, int(frame))
+        local = self._page_cache.get(key)
+        if local is None:
+            self.page_cache_stats["misses"] += 1
+            return None
+        self._page_cache.move_to_end(key)
+        self.page_cache_stats["hits"] += 1
+        return local
 
     def page_cache_put(self, owner: str, dtype: str, frame: int, local: int) -> None:
         if not self.cache_enabled:
             return
-        self._page_cache[(owner, jnp.dtype(dtype).name, int(frame))] = local
+        key = (owner, jnp.dtype(dtype).name, int(frame))
+        self._page_cache[key] = local
+        self._page_cache.move_to_end(key)
+        while len(self._page_cache) > self.page_cache_cap:
+            self._page_cache.popitem(last=False)
+            self.page_cache_stats["evictions"] += 1
 
     def clear_page_cache(self) -> None:
         self._page_cache.clear()

@@ -13,7 +13,7 @@ import dataclasses
 import statistics
 from typing import Callable, Dict, List, Optional
 
-from repro.core import fork
+from repro.fork import ForkHandle, ForkPolicy
 
 
 @dataclasses.dataclass
@@ -48,11 +48,11 @@ class StragglerMonitor:
                 if med > 0 and s.ewma_s > self.threshold * med
                 and s.node_id not in self.backups]
 
-    def mitigate(self, straggler_id: str, seed_node, handler_id: int,
-                 auth_key: int, spare_node) -> object:
-        """Backup-fork the straggler's worker state onto a spare node."""
-        child = fork.fork_resume(spare_node, seed_node.node_id, handler_id,
-                                 auth_key, lazy=True, prefetch=1)
+    def mitigate(self, straggler_id: str, handle: ForkHandle,
+                 spare_node) -> object:
+        """Backup-fork the straggler's worker state (its prepared seed
+        handle) onto a spare node."""
+        child = handle.resume_on(spare_node, ForkPolicy(lazy=True, prefetch=1))
         self.backups[straggler_id] = spare_node.node_id
         return child
 

@@ -15,7 +15,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import fork
+from repro.fork import ForkHandle, ForkPolicy
 from repro.platform.coordinator import Coordinator, ForkTreeNode
 
 
@@ -71,8 +71,8 @@ def run_workflow(coord: Coordinator, wf: Workflow, inputs: dict, *,
     fan_out = fan_out or {}
     results: Dict[str, Any] = {}
     instances: Dict[str, Any] = {}
-    seeds: Dict[str, tuple] = {}           # wf node -> (node_id, hid, key)
-    root = ForkTreeNode(func="<root>", node_id="", handler_id=None)
+    seeds: Dict[str, ForkHandle] = {}      # wf node -> short-lived seed handle
+    root = ForkTreeNode(func="<root>", node_id="", handle=None)
     tree_nodes = {None: root}
     coord.tree_open(wf.wf_id, root)
     mailbox: Dict[str, bytes] = {}
@@ -89,9 +89,8 @@ def run_workflow(coord: Coordinator, wf: Workflow, inputs: dict, *,
             inst = None
             if transfer == "fork" and ups:
                 src = wfunc.fork_from or ups[0]
-                node_id, hid, key = seeds[src]
-                inst = fork.fork_resume(node, node_id, hid, key, lazy=True,
-                                        prefetch=prefetch)
+                inst = seeds[src].resume_on(node, ForkPolicy(lazy=True,
+                                                             prefetch=prefetch))
                 ctx["__fork_parent"] = src
             elif transfer == "message" and ups:
                 # Fn-style: deserialize upstream state from the mailbox
@@ -102,7 +101,7 @@ def run_workflow(coord: Coordinator, wf: Workflow, inputs: dict, *,
                                               policy="fork")
             out = fdef.behavior(inst, ctx)
             outs.append(out)
-            tn = ForkTreeNode(func=name, node_id=node.node_id, handler_id=None)
+            tn = ForkTreeNode(func=name, node_id=node.node_id, handle=None)
             tree_nodes.setdefault(name, tn)
             parent_tn = tree_nodes.get(wfunc.fork_from or (ups[0] if ups else None), root)
             parent_tn.children.append(tn)
@@ -114,9 +113,9 @@ def run_workflow(coord: Coordinator, wf: Workflow, inputs: dict, *,
         if has_down:
             if transfer == "fork":
                 inst0 = instances[name][0]
-                hid, key = fork.fork_prepare(inst0.node, inst0)
-                seeds[name] = (inst0.node.node_id, hid, key)
-                tree_nodes[name].handler_id = hid
+                handle = inst0.node.prepare_fork(inst0)
+                seeds[name] = handle
+                tree_nodes[name].handle = handle
             else:
                 # message baseline: serialize outputs (the cost MITOSIS skips)
                 payload = {k: np.asarray(v) if hasattr(v, "shape") else v

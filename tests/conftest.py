@@ -6,7 +6,16 @@ import pytest
 from repro.configs.base import get_arch, reduce_for_smoke
 from repro.core.network import Network
 from repro.models import lm
+from repro.platform.coordinator import Coordinator, FunctionDef
 from repro.platform.node import NodeRuntime
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
 
 
 @pytest.fixture()
@@ -14,6 +23,25 @@ def cluster():
     net = Network()
     nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(4)]
     return net, nodes
+
+
+@pytest.fixture()
+def platform(hello_cfg, hello_params):
+    """A 3-node coordinator cluster on a FakeClock with one function "f"."""
+    net = Network()
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(3)]
+    coord = Coordinator(net, nodes, clock=clock)
+
+    def behavior(inst, ctx):
+        inst.ensure_tensor(inst.leaf_names[0])
+        return {"ok": True}
+
+    coord.register_function(FunctionDef(
+        name="f", arch=hello_cfg.name,
+        make_params=lambda: hello_params, behavior=behavior))
+    return net, nodes, coord, clock
 
 
 @pytest.fixture(scope="session")

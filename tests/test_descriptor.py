@@ -41,11 +41,10 @@ def test_descriptor_roundtrip_and_size():
 
 def test_descriptor_is_metadata_only(cluster, hello_cfg, hello_params):
     """The paper's core claim: descriptor KBs vs instance MBs."""
-    from repro.core import fork
     from repro.core.instance import ModelInstance
     net, nodes = cluster
     inst = ModelInstance.create(nodes[0], hello_cfg.name, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], inst)
-    blob = nodes[0].seeds[hid].blob
+    handle = nodes[0].prepare_fork(inst)
+    blob = nodes[0].seeds[handle.handler_id].blob
     assert len(blob) < inst.total_bytes() / 50, \
         f"descriptor {len(blob)}B not << state {inst.total_bytes()}B"

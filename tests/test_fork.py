@@ -1,13 +1,16 @@
 """The remote-fork primitive: prepare/resume semantics, COW isolation,
-multi-hop lineage, access control, fallback, caching, prefetch."""
+multi-hop lineage, access control, fallback, caching, prefetch — driven
+through the capability-style ForkHandle API (repro.fork)."""
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import AccessRevoked
+from repro.fork import ForkPolicy
 from repro.models import lm
 
 
@@ -18,8 +21,8 @@ def _mk_parent(node, cfg, params):
 def test_resume_lazy_then_equal(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(lazy=True))
     assert child.resident_fraction() == 0.0
     got = child.materialize_pytree()
     for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
@@ -31,18 +34,20 @@ def test_resume_lazy_then_equal(cluster, hello_cfg, hello_params):
 def test_bad_credentials_rejected(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
+    handle = nodes[0].prepare_fork(parent)
     with pytest.raises(PermissionError):
-        fork.fork_resume(nodes[1], "node0", hid, key + 1)
+        dataclasses.replace(handle, auth_key=handle.auth_key + 1) \
+            .resume_on(nodes[1])
     with pytest.raises(PermissionError):
-        fork.fork_resume(nodes[1], "node0", hid + 99, key)
+        dataclasses.replace(handle, handler_id=handle.handler_id + 99) \
+            .resume_on(nodes[1])
 
 
 def test_cow_isolation(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1])
     name = child.leaf_names[2]
     before = np.asarray(parent.ensure_tensor(name)).copy()
     child.write_tensor(name, jnp.ones(child.aspace[name].shape))
@@ -55,8 +60,8 @@ def test_cow_isolation(cluster, hello_cfg, hello_params):
 def test_page_granular_cow(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1])
     name = max(child.leaf_names, key=lambda n: child.aspace[n].npages)
     vma = child.aspace[name]
     assert vma.npages >= 2
@@ -76,13 +81,13 @@ def test_multihop_three_nodes(cluster, hello_cfg, hello_params):
     """grandchild reads hop-2 pages from the grandparent directly."""
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(lazy=True))
     # child materializes only one tensor, rest stay on the grandparent
     touched = child.leaf_names[0]
     child.ensure_tensor(touched)
-    hid2, key2 = fork.fork_prepare(nodes[1], child)
-    gchild = fork.fork_resume(nodes[2], "node1", hid2, key2, lazy=True)
+    handle2 = nodes[1].prepare_fork(child)
+    gchild = handle2.resume_on(nodes[2], ForkPolicy(lazy=True))
     hops = {n: set(np.unique(gchild.aspace[n].owner_hop).tolist())
             for n in gchild.leaf_names}
     assert hops[touched] == {1}          # owned by child
@@ -96,9 +101,9 @@ def test_multihop_three_nodes(cluster, hello_cfg, hello_params):
 def test_reclaim_revokes_remote_access(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
-    fork.fork_reclaim(nodes[0], hid)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(lazy=True))
+    handle.reclaim()
     name = child.leaf_names[0]
     # DC target destroyed -> RNIC rejects; fallback daemon still serves
     # (pages are alive because the instance itself wasn't freed)
@@ -109,8 +114,8 @@ def test_reclaim_revokes_remote_access(cluster, hello_cfg, hello_params):
 def test_swap_out_triggers_fallback(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(lazy=True))
     name = child.leaf_names[1]
     before = np.asarray(parent.ensure_tensor(name)).copy()
     nodes[0].swap_out_vma(parent, name)
@@ -121,30 +126,31 @@ def test_swap_out_triggers_fallback(cluster, hello_cfg, hello_params):
 
 def test_sibling_page_cache(cluster, hello_cfg, hello_params):
     net, nodes = cluster
-    nodes[1].cache_enabled = True
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    c1 = fork.fork_resume(nodes[1], "node0", hid, key)
+    handle = nodes[0].prepare_fork(parent)
+    # sibling-cache participation travels in the policy now
+    c1 = handle.resume_on(nodes[1], ForkPolicy(sibling_cache=True))
     c1.ensure_all()
     rdma_after_first = net.meter["rdma_bytes"]
-    c2 = fork.fork_resume(nodes[1], "node0", hid, key)
+    c2 = handle.resume_on(nodes[1])
     c2.ensure_all()
     assert c2.stats["pages_cached"] > 0 and c2.stats["pages_rdma"] == 0
     # only the descriptor fetch hit the wire the second time
     assert net.meter["rdma_bytes"] - rdma_after_first < 8192
+    assert nodes[1].page_cache_stats["hits"] > 0
 
 
 def test_prefetch_reduces_faults(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
+    handle = nodes[0].prepare_fork(parent)
     name = max(parent.aspace, key=lambda n: parent.aspace[n].npages)
     npages = parent.aspace[name].npages
 
-    c0 = fork.fork_resume(nodes[1], "node0", hid, key)
+    c0 = handle.resume_on(nodes[1])
     for p in range(npages):
         c0.touch_pages(name, [p], prefetch=0)
-    c1 = fork.fork_resume(nodes[2], "node0", hid, key)
+    c1 = handle.resume_on(nodes[2])
     for p in range(npages):
         c1.touch_pages(name, [p], prefetch=2)
     assert c1.stats["faults"] < c0.stats["faults"]
@@ -153,18 +159,21 @@ def test_prefetch_reduces_faults(cluster, hello_cfg, hello_params):
 def test_parent_crash_surfaces(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(lazy=True))
     nodes[0].crash()
     with pytest.raises(ConnectionError):
         child.ensure_all()
+    # and a new fork from the dead parent fails up front
+    with pytest.raises(ConnectionError):
+        handle.resume_on(nodes[2])
 
 
 def test_registers_travel_in_descriptor(cluster, hello_cfg, hello_params):
     net, nodes = cluster
     parent = ModelInstance.create(nodes[0], hello_cfg.name, hello_params,
                                   registers={"step": 41, "temp": 0.7})
-    hid, key = fork.fork_prepare(nodes[0], parent)
-    child = fork.fork_resume(nodes[1], "node0", hid, key)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1])
     assert child.registers["step"] == 41
     assert abs(child.registers["temp"] - 0.7) < 1e-9

@@ -1,0 +1,395 @@
+"""Lease-based ForkHandle control plane: lease expiry/renewal, revocation
+generations, fan-out fork trees, handle serialization, policy validation,
+deprecated-shim equivalence, and the coordinator lifecycle fixes that ride
+on the new API (pick_node, seed-instance pinning, bounded page cache)."""
+import math
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import fork as legacy_fork
+from repro.core.instance import ModelInstance
+from repro.core.network import Network
+from repro.fork import (AccessRevoked, ForkHandle, ForkPolicy, ForkTree,
+                        LeaseExpired)
+from repro.platform.node import NodeRuntime
+
+from conftest import FakeClock
+
+
+@pytest.fixture()
+def leased_cluster():
+    net = Network()
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(10)]
+    return net, nodes, clock
+
+
+def _mk_parent(node, cfg, params):
+    return ModelInstance.create(node, cfg.name, params, kind="weights")
+
+
+# ---------------------------------------------------------------------------
+# leases
+# ---------------------------------------------------------------------------
+
+
+def test_lease_expired_resume_raises(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent, lease=10.0)
+    assert not handle.expired and handle.remaining() == pytest.approx(10.0)
+    handle.resume_on(nodes[1])                      # fresh: fine
+    clock.t = 10.0                                  # deadline is exclusive
+    assert handle.expired
+    with pytest.raises(LeaseExpired):
+        handle.resume_on(nodes[2])
+
+
+def test_lease_renewal_extends_deadline(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent, lease=10.0)
+    clock.t = 6.0
+    handle.renew()                                  # default: original duration
+    assert handle.lease_deadline == pytest.approx(16.0)
+    clock.t = 15.0
+    handle.resume_on(nodes[1])                      # still fresh post-renewal
+    handle.renew(extend=100.0)
+    assert handle.lease_deadline == pytest.approx(115.0)
+
+
+def test_unbounded_lease_never_expires(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)          # lease=None
+    clock.t = 1e9
+    assert not handle.expired and handle.remaining() == math.inf
+    handle.resume_on(nodes[1])
+
+
+def test_invalid_lease_rejected(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    with pytest.raises(ValueError):
+        nodes[0].prepare_fork(parent, lease=0.0)
+
+
+# ---------------------------------------------------------------------------
+# revocation generations
+# ---------------------------------------------------------------------------
+
+
+def test_revoke_bumps_generation(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    copy = ForkHandle.from_dict(handle.to_dict())   # an outstanding copy
+    fresh = handle.revoke()
+    assert fresh.generation == handle.generation + 1
+    for stale in (handle, copy):
+        with pytest.raises(AccessRevoked):
+            stale.resume_on(nodes[1])
+    # the seed itself stays prepared: the new-generation handle still works
+    child = fresh.resume_on(nodes[1])
+    assert child.arch == hello_cfg.name
+    # a second revocation invalidates the first reissue too
+    newer = fresh.revoke()
+    with pytest.raises(AccessRevoked):
+        fresh.resume_on(nodes[2])
+    newer.resume_on(nodes[2])
+
+
+def test_revoke_kills_legacy_tuple_credentials(leased_cluster, hello_cfg,
+                                               hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    handle.revoke()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(AccessRevoked):
+            legacy_fork.fork_resume(nodes[1], "node0", handle.handler_id,
+                                    handle.auth_key)
+
+
+# ---------------------------------------------------------------------------
+# handle lifecycle: context manager, serialization, reclaim
+# ---------------------------------------------------------------------------
+
+
+def test_context_manager_auto_reclaims(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    with nodes[0].prepare_fork(parent) as handle:
+        handle.resume_on(nodes[1])
+    assert handle.handler_id not in nodes[0].seeds
+    with pytest.raises(PermissionError):
+        handle.resume_on(nodes[2])
+    handle.reclaim()                                # idempotent
+
+
+def test_handle_serialization_roundtrip(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent, lease=50.0)
+    wire = ForkHandle.from_json(handle.to_json())
+    assert wire == handle                           # runtime excluded from eq
+    # resume needs no rebinding (child reaches the parent via its network)
+    child = wire.resume_on(nodes[1])
+    assert child.arch == hello_cfg.name
+    # parent-side lifecycle calls need an explicit rebind
+    with pytest.raises(RuntimeError):
+        wire.renew()
+    with pytest.raises(ValueError):
+        wire.bind(nodes[3])                         # wrong node refused
+    wire.bind(nodes[0]).renew(extend=99.0)
+    assert nodes[0].seeds[handle.handler_id].lease_deadline == pytest.approx(99.0)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError):
+        ForkPolicy(prefetch=-1)
+    with pytest.raises(ValueError):
+        ForkPolicy(descriptor_fetch="bogus")
+    with pytest.raises(ValueError):
+        ForkPolicy(lazy=1)
+    with pytest.raises(TypeError):
+        ForkPolicy.coerce(42)
+    assert ForkPolicy.coerce({"prefetch": 3}).prefetch == 3
+    assert ForkPolicy.coerce(None) == ForkPolicy()
+
+
+# ---------------------------------------------------------------------------
+# fan-out fork tree (§6.3)
+# ---------------------------------------------------------------------------
+
+
+def test_fan_out_64_children_degree_8(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent, lease=100.0)
+    targets = [nodes[1 + i % 9] for i in range(64)]
+    tree = handle.fan_out(targets, ForkPolicy(lazy=True), tree_degree=8)
+    assert isinstance(tree, ForkTree) and len(tree) == 64
+    # no seed (root included) served more than tree_degree descriptors
+    assert max(tree.served_by().values()) <= 8
+    # 64 children at degree 8: root serves 8, 7 promoted re-seeds serve 56
+    assert len(tree.seeds) == 7
+    assert tree.depth() == 2
+    assert sorted(tree.levels).count(1) == 8 and tree.levels.count(2) == 56
+    # a deep child still reads the original bits through the hop chain
+    deep = tree.children[tree.levels.index(2)]
+    name = deep.leaf_names[0]
+    np.testing.assert_array_equal(
+        np.asarray(deep.ensure_tensor(name)),
+        np.asarray(parent.ensure_tensor(name)))
+    # one close() reclaims every short-lived re-seed but never the root
+    tree.close()
+    for reseed in tree.seeds:
+        assert reseed.handler_id not in reseed.runtime.seeds
+    assert handle.handler_id in nodes[0].seeds
+    tree.close()                                    # idempotent
+    # lease-expired root refuses further fan-out
+    clock.t = 101.0
+    with pytest.raises(LeaseExpired):
+        handle.fan_out([nodes[1]], tree_degree=8)
+
+
+def test_fan_out_as_context_manager(leased_cluster, hello_cfg, hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    with handle.fan_out([nodes[1 + i % 9] for i in range(12)],
+                        tree_degree=4) as tree:
+        assert len(tree) == 12
+    assert tree.closed
+    with pytest.raises(ValueError):
+        handle.fan_out([nodes[1]], tree_degree=0)
+
+
+# ---------------------------------------------------------------------------
+# deprecated shims
+# ---------------------------------------------------------------------------
+
+
+def test_shims_warn_and_delegate(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    with pytest.deprecated_call():
+        hid, key = legacy_fork.fork_prepare(nodes[0], parent)
+    with pytest.deprecated_call():
+        child = legacy_fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
+    got = child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.deprecated_call():
+        legacy_fork.fork_reclaim(nodes[0], hid)
+    assert hid not in nodes[0].seeds
+
+
+def test_shim_equivalence_same_page_fault_stats(hello_cfg, hello_params):
+    """Old tuple API and new handle API drive the identical data path."""
+    def run_old():
+        net = Network()
+        nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+        parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            hid, key = legacy_fork.fork_prepare(nodes[0], parent)
+            child = legacy_fork.fork_resume(nodes[1], "node0", hid, key,
+                                            lazy=True, prefetch=2)
+        child.ensure_all()
+        return child.stats, dict(net.meter)
+
+    def run_new():
+        net = Network()
+        nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+        parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+        handle = nodes[0].prepare_fork(parent)
+        child = handle.resume_on(nodes[1], ForkPolicy(lazy=True, prefetch=2))
+        child.ensure_all()
+        return child.stats, dict(net.meter)
+
+    old_stats, old_meter = run_old()
+    new_stats, new_meter = run_new()
+    assert old_stats == new_stats
+    assert old_meter == new_meter
+
+
+# ---------------------------------------------------------------------------
+# coordinator lifecycle fixes riding on the new API (shared `platform`
+# fixture from conftest.py)
+# ---------------------------------------------------------------------------
+
+
+def test_pick_node_no_live_nodes_raises(platform):
+    net, nodes, coord, clock = platform
+    for n in nodes:
+        n.crash()
+    with pytest.raises(RuntimeError, match="no live nodes"):
+        coord.pick_node()
+
+
+def test_pick_node_all_excluded_raises(platform):
+    net, nodes, coord, clock = platform
+    with pytest.raises(RuntimeError, match="no live nodes"):
+        coord.pick_node(exclude=tuple(n.node_id for n in nodes))
+
+
+def test_release_does_not_free_the_platform_seed(platform, hello_params):
+    net, nodes, coord, clock = platform
+    out, inst = coord.invoke("f", policy="fork")    # coldstart -> becomes seed
+    handle = coord.seed_store["f"]
+    assert nodes and net                             # fixture sanity
+    coord.release("f", inst, policy="fork")
+    # the seed's backing instance must survive the release...
+    entry = coord.nodes[handle.parent_node].seeds[handle.handler_id]
+    assert entry.instance is inst and inst.aspace, "seed instance was freed"
+    # ...so a later fork still materializes the pristine state
+    out2, child = coord.invoke("f", policy="fork")
+    assert child.ancestry, "second invoke must fork, not coldstart"
+    got = child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # non-seed children are still freed on release
+    coord.release("f", child, policy="fork")
+    assert not child.aspace
+    # lease-expiry GC reclaims the pinned seed instance exactly once
+    clock.t = handle.lease_deadline + 1
+    freed = coord.gc()
+    assert freed["seeds"] == 1 and not inst.aspace
+
+
+def test_seed_store_holds_leased_handles(platform):
+    net, nodes, coord, clock = platform
+    coord.invoke("f")
+    handle = coord.seed_store["f"]
+    assert isinstance(handle, ForkHandle)
+    assert handle.remaining() == pytest.approx(600.0)
+    clock.t = 500.0
+    coord.renew_seed("f")
+    assert handle.remaining() == pytest.approx(600.0)
+
+
+def test_renew_rejects_nonpositive_extend(leased_cluster, hello_cfg,
+                                          hello_params):
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent, lease=10.0)
+    for bad in (0.0, -10.0):
+        with pytest.raises(ValueError):
+            handle.renew(extend=bad)
+    assert handle.lease_deadline == pytest.approx(10.0)  # untouched
+
+
+def test_renewed_seed_survives_dangling_gc(platform):
+    """Renewal is a keepalive: it refreshes the node-side creation stamp so
+    the MAX_FUNCTION_LIFETIME dangling GC doesn't reclaim a live seed."""
+    net, nodes, coord, clock = platform
+    coord.invoke("f")
+    handle = coord.seed_store["f"]
+    clock.t = 500.0
+    coord.renew_seed("f")
+    clock.t = 901.0                     # > MAX_FUNCTION_LIFETIME since deploy
+    coord.gc()
+    assert handle.alive and coord._seed_fresh(handle)
+    out, child = coord.invoke("f", policy="fork")
+    assert child.ancestry, "renewed seed must still serve forks"
+
+
+def test_stale_store_handle_falls_back_to_coldstart(platform):
+    """If the node-side seed vanishes underneath the store (dangling GC),
+    renew drops the stale handle and invoke coldstarts instead of raising."""
+    net, nodes, coord, clock = platform
+    coord.invoke("f")
+    handle = coord.seed_store["f"]
+    handle.reclaim()                    # simulate node-side reclamation
+    assert not handle.alive
+    coord.renew_seed("f")               # must not raise; drops the handle
+    assert "f" not in coord.seed_store
+    coord.deploy_seed("f", nodes[0])    # redeploy, then the same via gc
+    coord.seed_store["f"].reclaim()
+    out, inst = coord.invoke("f", policy="fork")
+    assert out["ok"], "stale handle must reroute to coldstart, not raise"
+
+
+# ---------------------------------------------------------------------------
+# bounded sibling page cache
+# ---------------------------------------------------------------------------
+
+
+def test_page_cache_lru_cap_and_eviction_stat(hello_cfg, hello_params):
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=1024, cache_enabled=True,
+                       page_cache_cap=4)
+    for frame in range(6):
+        node.page_cache_put("owner", "float32", frame, frame + 100)
+    assert len(node._page_cache) == 4
+    assert node.page_cache_stats["evictions"] == 2
+    # oldest entries (0, 1) were evicted, newest survive
+    assert node.page_cache_get("owner", "float32", 0) is None
+    assert node.page_cache_get("owner", "float32", 5) == 105
+    # a get refreshes recency: 2 survives the next insert, 3 is evicted
+    assert node.page_cache_get("owner", "float32", 2) == 102
+    node.page_cache_put("owner", "float32", 7, 107)
+    assert node.page_cache_get("owner", "float32", 2) == 102
+    assert node.page_cache_get("owner", "float32", 3) is None
+    assert node.page_cache_stats["hits"] == 3
+    assert node.page_cache_stats["evictions"] == 3
+
+
+def test_page_cache_bounded_under_fork_load(hello_cfg, hello_params):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024,
+                         cache_enabled=True, page_cache_cap=8)
+             for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1])
+    child.ensure_all()
+    assert len(nodes[1]._page_cache) <= 8
+    assert nodes[1].page_cache_stats["evictions"] > 0

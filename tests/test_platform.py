@@ -6,7 +6,6 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import Network
 from repro.models import lm
@@ -14,31 +13,8 @@ from repro.platform.coordinator import Coordinator, FunctionDef
 from repro.platform.node import NodeRuntime
 from repro.platform.workflow import Workflow, WorkflowFunc, run_workflow
 
-
-class FakeClock:
-    def __init__(self):
-        self.t = 0.0
-
-    def __call__(self):
-        return self.t
-
-
-@pytest.fixture()
-def platform(hello_cfg, hello_params):
-    net = Network()
-    clock = FakeClock()
-    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
-             for i in range(3)]
-    coord = Coordinator(net, nodes, clock=clock)
-
-    def behavior(inst, ctx):
-        inst.ensure_tensor(inst.leaf_names[0])
-        return {"ok": True}
-
-    coord.register_function(FunctionDef(
-        name="f", arch=hello_cfg.name,
-        make_params=lambda: hello_params, behavior=behavior))
-    return net, nodes, coord, clock
+# the shared `platform` fixture (3-node coordinator on a FakeClock) lives in
+# conftest.py
 
 
 def test_first_coldstart_becomes_seed(platform):
@@ -54,8 +30,8 @@ def test_first_coldstart_becomes_seed(platform):
 def test_seed_timeout_gc(platform):
     net, nodes, coord, clock = platform
     coord.invoke("f")
-    rec = coord.seed_store["f"]
-    clock.t = rec.keep_alive + 1
+    handle = coord.seed_store["f"]
+    clock.t = handle.lease_deadline + 1
     freed = coord.gc()
     assert freed["seeds"] == 1 and "f" not in coord.seed_store
 
@@ -86,10 +62,10 @@ def test_cache_policy_is_per_node_and_single_use(platform):
 def test_node_crash_reroutes_to_coldstart(platform):
     net, nodes, coord, clock = platform
     coord.invoke("f")                      # seed on some node
-    rec = coord.seed_store["f"]
-    coord.nodes[rec.node_id].crash()
+    handle = coord.seed_store["f"]
+    coord.nodes[handle.parent_node].crash()
     out, inst = coord.invoke("f", node=next(
-        n for n in nodes if n.alive and n.node_id != rec.node_id))
+        n for n in nodes if n.alive and n.node_id != handle.parent_node))
     assert out["ok"]
 
 
@@ -149,7 +125,7 @@ def test_dangling_seed_gc_by_max_lifetime(platform):
     net, nodes, coord, clock = platform
     out, inst = coord.invoke("f")
     # simulate a short-lived seed left behind by a crashed coordinator
-    hid, key = fork.fork_prepare(inst.node, inst)
+    inst.node.prepare_fork(inst)
     clock.t = 901.0
     freed = coord.gc()
     assert freed["dangling"] >= 1

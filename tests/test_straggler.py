@@ -2,7 +2,6 @@
 import jax
 import numpy as np
 
-from repro.core import fork
 from repro.core.instance import ModelInstance
 from repro.core.network import Network
 from repro.models import lm
@@ -25,8 +24,8 @@ def test_detect_and_backup_fork(hello_cfg, hello_params):
     # worker state lives on node2; its seed was prepared at deploy time
     worker = ModelInstance.create(nodes[2], hello_cfg.name, hello_params,
                                   registers={"step": 17})
-    hid, key = fork.fork_prepare(nodes[2], worker)
-    backup = mon.mitigate("node2", nodes[2], hid, key, nodes[3])
+    handle = nodes[2].prepare_fork(worker)
+    backup = mon.mitigate("node2", handle, nodes[3])
     assert backup.registers["step"] == 17
     got = backup.materialize_pytree()
     for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
