@@ -1,7 +1,7 @@
 """Shared benchmark harness.
 
 Measures both REAL wall time of the implementation's operations and the
-DERIVED time from the calibrated network model (core/network.NetModel),
+DERIVED time from the calibrated network model (repro.net.NetModel),
 since this container's single CPU core is not representative of
 RNIC/ICI-attached hosts.  Both columns are reported.
 """
@@ -19,7 +19,7 @@ import numpy as np
 
 from repro.configs.base import get_arch
 from repro.core.instance import ModelInstance
-from repro.core.network import Network
+from repro.net import Network
 from repro.models import lm
 from repro.platform.node import NodeRuntime
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import get_arch
-from repro.core.network import Network
+from repro.net import Network
 from repro.models import lm
 from repro.platform.coordinator import Coordinator, FunctionDef
 from repro.platform.node import NodeRuntime

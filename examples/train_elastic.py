@@ -21,7 +21,7 @@ import numpy as np
 
 from repro.configs.base import get_arch, reduce_for_smoke
 from repro.core.instance import ModelInstance
-from repro.core.network import Network
+from repro.net import Network
 from repro.fork import ForkPolicy
 from repro.distributed import ctx
 from repro.distributed.sharding import make_axis_env, params_shardings

@@ -16,9 +16,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import descriptor as desc_mod
-from repro.core.network import AccessRevoked
 from repro.core.pagetable import F_DIRTY, F_PRESENT, VMA, AddressSpace
 from repro.memory import paging
+from repro.net import AccessRevoked
 
 
 class ModelInstance:
@@ -36,6 +36,18 @@ class ModelInstance:
         self._tensors: Dict[str, jax.Array] = {}
         self._owned_frames: Dict[str, list] = {}
         self.instance_id = node.new_instance_id()
+        # page-fetch transport name (repro.net registry); None = the
+        # network's default backend.  Set from ForkPolicy.page_fetch.
+        self.page_transport: Optional[str] = None
+        # ForkPolicy.prefetch: pages pulled per fault when the caller
+        # doesn't pass an explicit prefetch
+        self.default_prefetch = 0
+        # True once this instance's frame table traveled in a descriptor
+        # (prepare_fork): only then can other nodes hold cache entries
+        # keyed on our frames, so only then must free() broadcast
+        self.frames_published = False
+        # stats keys are historical: "pages_rdma" counts pages served by the
+        # (possibly two-sided) page transport, "pages_rpc" the fallback daemon
         self.stats = {"faults": 0, "pages_rdma": 0, "pages_rpc": 0,
                       "pages_cached": 0, "pages_local": 0, "cow_pages": 0}
         node.instances[self.instance_id] = self
@@ -64,9 +76,13 @@ class ModelInstance:
     # the fault handler (§5.4 Table 2)
     # ------------------------------------------------------------------
 
-    def fetch_pages(self, name: str, pages: np.ndarray, prefetch: int = 0) -> None:
+    def fetch_pages(self, name: str, pages: np.ndarray,
+                    prefetch: Optional[int] = None) -> None:
         """Materialize the given (missing) pages of a VMA, plus `prefetch`
-        adjacent pages per fault — the RDMA-aware page-fault handler."""
+        adjacent pages per fault — the RDMA-aware page-fault handler.
+        ``prefetch=None`` falls back to the policy's ``default_prefetch``."""
+        if prefetch is None:
+            prefetch = self.default_prefetch
         vma = self.aspace[name]
         missing = set(vma.missing_pages().tolist())
         want = [p for p in np.atleast_1d(pages).tolist() if p in missing]
@@ -94,7 +110,9 @@ class ModelInstance:
             key = vma.dc_keys.get(hop, -1)
             remote_frames = vma.frames[plist]
 
-            # sibling page cache (MITOSIS+cache)
+            # sibling page cache (MITOSIS+cache): hits are COPIED into frames
+            # this instance owns — sharing the fetcher's frames would leave
+            # our page table dangling once the fetcher frees them
             uncached, cached_local = [], {}
             for p, rf in zip(plist, remote_frames.tolist()):
                 lf = self.node.page_cache_get(owner, vma.dtype, rf)
@@ -102,50 +120,52 @@ class ModelInstance:
                     cached_local[p] = lf
                 else:
                     uncached.append(p)
-            for p, lf in cached_local.items():
-                vma.mark_resident([p], [lf])
-                self.stats["pages_cached"] += 1
+            if cached_local:
+                hit_pages = sorted(cached_local)
+                src = np.asarray([cached_local[p] for p in hit_pages], np.int32)
+                data = self.node.pool.read_pages(vma.dtype, src)
+                self._adopt_pages(vma, hit_pages, data)
+                self.stats["pages_cached"] += len(hit_pages)
 
             if not uncached:
                 continue
             try:
-                data = self.node.network.rdma_read_pages(
+                data = self.node.network.read_pages(
                     self.node.node_id, owner, vma.dtype,
-                    vma.frames[uncached], key)
+                    vma.frames[uncached], key,
+                    transport=self.page_transport)
                 self.stats["pages_rdma"] += len(uncached)
             except AccessRevoked:
                 # VA->PA changed at the owner (swap, reclaim): RPC fallback
                 self._fallback_fetch(vma, owner, uncached)
                 continue
-            local = self.node.pool.alloc(vma.dtype, len(uncached))
-            self.node.pool.write_pages(vma.dtype, local, data)
-            self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
             remote_of = vma.frames[uncached].tolist()
-            vma.mark_resident(uncached, local)
+            local = self._adopt_pages(vma, uncached, data)
             for p, rf, lf in zip(uncached, remote_of, local.tolist()):
                 self.node.page_cache_put(owner, vma.dtype, rf, int(lf))
 
     def _fallback_fetch(self, vma: VMA, owner: str, plist: list) -> None:
+        # the fallback daemon is inherently two-sided: always the rpc backend
         net = self.node.network
         frames = vma.frames[plist]
         data = net.rpc(self.node.node_id, owner,
                        len(plist) * self.node.pool.page_elems
                        * np.dtype(vma.dtype).itemsize,
-                       net.nodes[owner].fallback_serve, vma.dtype, frames)
-        local = self.node.pool.alloc(vma.dtype, len(plist))
-        self.node.pool.write_pages(vma.dtype, local, data)
-        self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
-        vma.mark_resident(plist, local)
+                       net.nodes[owner].fallback_serve, vma.dtype, frames,
+                       transport="rpc")
+        self._adopt_pages(vma, plist, data)
         self.stats["pages_rpc"] += len(plist)
 
     # ------------------------------------------------------------------
     # tensor-level API
     # ------------------------------------------------------------------
 
-    def touch_pages(self, name: str, pages, prefetch: int = 0) -> None:
+    def touch_pages(self, name: str, pages,
+                    prefetch: Optional[int] = None) -> None:
         self.fetch_pages(name, np.asarray(pages), prefetch)
 
-    def ensure_tensor(self, name: str, prefetch: int = 0) -> jax.Array:
+    def ensure_tensor(self, name: str,
+                      prefetch: Optional[int] = None) -> jax.Array:
         if name in self._tensors:
             return self._tensors[name]
         vma = self.aspace[name]
@@ -157,7 +177,7 @@ class ModelInstance:
         self._tensors[name] = t
         return t
 
-    def ensure_all(self, prefetch: int = 0) -> None:
+    def ensure_all(self, prefetch: Optional[int] = None) -> None:
         for name in self.leaf_names:
             self.ensure_tensor(name, prefetch)
 
@@ -165,15 +185,23 @@ class ModelInstance:
         leaves = [self.ensure_tensor(n) for n in self.leaf_names]
         return desc_mod.unflatten_from_paths(self.leaf_paths, leaves)
 
+    def _adopt_pages(self, vma: VMA, pages, data) -> np.ndarray:
+        """Copy ``data`` into freshly allocated local frames this instance
+        OWNS (recorded for free-time invalidation) and mark ``pages``
+        resident there.  The single ownership-bookkeeping site for every
+        materialization path (transport fetch, cache hit, fallback, COW)."""
+        local = self.node.pool.alloc(vma.dtype, len(pages))
+        self.node.pool.write_pages(vma.dtype, local, data)
+        self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
+        vma.mark_resident(pages, local)
+        return local
+
     def write_pages(self, name: str, pages, data) -> None:
         """COW write: dirty pages land in freshly allocated local frames;
         ancestor frames are never touched."""
         vma = self.aspace[name]
         pages = np.atleast_1d(np.asarray(pages))
-        local = self.node.pool.alloc(vma.dtype, len(pages))
-        self.node.pool.write_pages(vma.dtype, local, data)
-        self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())
-        vma.mark_resident(pages, local)
+        self._adopt_pages(vma, pages, data)
         vma.mark_dirty(pages)
         self.stats["cow_pages"] += len(pages)
         self._tensors.pop(name, None)
@@ -222,6 +250,10 @@ class ModelInstance:
 
     def free(self) -> None:
         for dt, frames in self._owned_frames.items():
+            self.node.page_cache_invalidate_frames(dt, frames)
+            if self.frames_published:
+                self.node.network.drop_cached_frames(self.node.node_id, dt,
+                                                     frames)
             self.node.pool.free(dt, frames)
         self._owned_frames.clear()
         self._tensors.clear()

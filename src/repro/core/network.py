@@ -1,135 +1,31 @@
-"""Cluster network: DCT-style connection pool, connection-based access
-control, one-sided reads, RPC — with byte metering and an RDMA/ICI latency
-model for derived benchmark columns (§5.3, §5.4).
+"""Compatibility re-export — the data plane lives in :mod:`repro.net`.
 
-"One-sided read" here is a real device gather out of the owner pool's frames
-array — the reading node's CPU-side logic never calls into the owner's
-instance code, mirroring CPU-bypass.  Access control is enforced exactly as
-in the paper: the read is admitted iff the (node, dc_key) pair is a live DC
-target; revoking the target kills all remote access to that VMA.
+The monolithic Network (hardwired ``dct``/``rc`` flags, bespoke
+``rdma_read_pages``/``rdma_read_blob``/``rpc`` methods) was redesigned into
+the pluggable transport package: a :class:`repro.net.Transport` interface
+behind a name-keyed registry, with :class:`repro.net.Network` as a thin
+router.  Import from ``repro.net`` in new code; this module only keeps the
+old import path alive for one release (same warn-then-delete cycle the
+``repro.core.fork`` tuple shims went through — CI's DeprecationWarning-as-
+error job proves no in-repo code still imports it).
 """
-from __future__ import annotations
+import warnings
 
-import dataclasses
-from collections import Counter
-from typing import Dict, Optional
+from repro.net import (AccessRevoked, LeaseExpired, NetModel, Network,
+                       Transport, register_transport, resolve_transport,
+                       transport_names)
 
-import jax.numpy as jnp
-import numpy as np
+warnings.warn(
+    "repro.core.network is deprecated; import from repro.net instead "
+    "(see docs/transport.md)", DeprecationWarning, stacklevel=2)
 
-
-class AccessRevoked(PermissionError):
-    """One-sided access rejected: the DC target is gone or the handle's
-    generation was revoked at the parent (§5.2 connection-based control)."""
-
-
-class LeaseExpired(PermissionError):
-    """The seed's lease ran out before the child authenticated — the parent
-    refuses resume, mirroring rFaaS-style leased capabilities."""
-
-
-@dataclasses.dataclass
-class NetModel:
-    """Latency/bandwidth constants (defaults ~ConnectX-4 100Gb/s, paper §7)."""
-    rdma_lat: float = 2e-6          # one-sided READ latency
-    rdma_bw: float = 12.5e9         # 100 Gb/s
-    rpc_lat: float = 8e-6           # two-sided RPC round trip
-    rc_setup: float = 4e-3          # RC QP connect (paper: 4 ms)
-    dct_setup: float = 1e-6         # DCT: piggybacked, <1 us
-    dfs_lat: float = 100e-6         # distributed-FS request (CRIU-remote)
-    disk_bw: float = 2e9            # checkpoint "disk" (tmpfs-ish)
-    ici_bw: float = 50e9            # TPU ICI per link (for TPU-mode derivations)
-
-
-class Network:
-    def __init__(self, model: Optional[NetModel] = None, transport: str = "dct"):
-        assert transport in ("dct", "rc")
-        self.model = model or NetModel()
-        self.transport = transport
-        self.nodes: Dict[str, "object"] = {}
-        self.meter = Counter()
-        self.sim_time = 0.0
-        self._connections = set()           # (src, dst) with a live QP
-        # DC targets: (node_id, dc_key) -> True while valid
-        self._dc_targets: Dict[tuple, bool] = {}
-        self._next_key = 1
-
-    # -- membership -----------------------------------------------------------
-
-    def register(self, node) -> None:
-        self.nodes[node.node_id] = node
-
-    def unregister(self, node_id: str) -> None:
-        self.nodes.pop(node_id, None)
-        for k in [k for k in self._dc_targets if k[0] == node_id]:
-            del self._dc_targets[k]
-
-    # -- DC targets (access control) -------------------------------------------
-
-    def create_dc_target(self, node_id: str) -> int:
-        """Allocate a DC key guarding one VMA (paper: 12 B child-side)."""
-        key = self._next_key
-        self._next_key += 1
-        self._dc_targets[(node_id, key)] = True
-        self.meter["dc_targets"] += 1
-        return key
-
-    def destroy_dc_target(self, node_id: str, key: int) -> None:
-        self._dc_targets.pop((node_id, key), None)
-
-    def target_valid(self, node_id: str, key: int) -> bool:
-        return self._dc_targets.get((node_id, key), False)
-
-    # -- connections ------------------------------------------------------------
-
-    def _connect(self, src: str, dst: str) -> None:
-        if (src, dst) in self._connections:
-            return
-        self._connections.add((src, dst))
-        self.meter["conn_setups"] += 1
-        self.sim_time += (self.model.dct_setup if self.transport == "dct"
-                          else self.model.rc_setup)
-
-    # -- data plane ---------------------------------------------------------------
-
-    def rdma_read_pages(self, src: str, dst: str, dtype, frames, dc_key: int):
-        """One-sided READ of `frames` from dst's pool. Returns (n, page_elems)."""
-        if dst not in self.nodes:
-            raise ConnectionError(f"node {dst} is down")
-        if not self.target_valid(dst, dc_key):
-            raise AccessRevoked(f"DC target {dc_key}@{dst} destroyed")
-        self._connect(src, dst)
-        pool = self.nodes[dst].pool
-        pages = pool.read_pages(dtype, frames)
-        nbytes = pages.size * pages.dtype.itemsize
-        self.meter["rdma_bytes"] += nbytes
-        self.meter["rdma_ops"] += 1
-        self.sim_time += self.model.rdma_lat + nbytes / self.model.rdma_bw
-        return pages
-
-    def rdma_read_blob(self, src: str, dst: str, nbytes: int) -> None:
-        """Metered one-sided read of an opaque blob (descriptor fetch)."""
-        if dst not in self.nodes:
-            raise ConnectionError(f"node {dst} is down")
-        self._connect(src, dst)
-        self.meter["rdma_bytes"] += nbytes
-        self.meter["rdma_ops"] += 1
-        self.sim_time += self.model.rdma_lat + nbytes / self.model.rdma_bw
-
-    def rpc(self, src: str, dst: str, nbytes: int, fn, *args, **kwargs):
-        """Two-sided RPC executed by the destination node (FaSST-style)."""
-        if dst not in self.nodes:
-            raise ConnectionError(f"node {dst} is down")
-        self.meter["rpc_bytes"] += nbytes
-        self.meter["rpc_ops"] += 1
-        self.sim_time += self.model.rpc_lat + nbytes / self.model.rdma_bw
-        return fn(*args, **kwargs)
-
-    # -- reporting -----------------------------------------------------------------
-
-    def snapshot(self) -> dict:
-        return dict(self.meter) | {"sim_time": self.sim_time}
-
-    def reset_meter(self) -> None:
-        self.meter.clear()
-        self.sim_time = 0.0
+__all__ = [
+    "AccessRevoked",
+    "LeaseExpired",
+    "NetModel",
+    "Network",
+    "Transport",
+    "register_transport",
+    "resolve_transport",
+    "transport_names",
+]

@@ -20,8 +20,10 @@ authentication RPC: an expired lease raises ``LeaseExpired``, a stale
 generation raises ``AccessRevoked`` — children never see a half-valid seed.
 
 Entry point: ``NodeRuntime.prepare_fork(instance, lease=...) -> ForkHandle``.
-The old ``fork_prepare``/``fork_resume``/``fork_reclaim`` functions remain as
-deprecated shims over this package for one release.
+The old ``fork_prepare``/``fork_resume``/``fork_reclaim`` tuple shims have
+been removed; descriptor and page traffic both dispatch through the
+``repro.net`` transport registry (``ForkPolicy.descriptor_fetch`` /
+``page_fetch`` select backends by name — see ``docs/transport.md``).
 """
 from repro.fork.errors import AccessRevoked, LeaseExpired
 from repro.fork.handle import DEFAULT_TREE_DEGREE, ForkHandle, prepare_fork

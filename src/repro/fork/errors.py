@@ -1,9 +1,9 @@
 """Control-plane exceptions.
 
-Defined next to the transport (``repro.core.network``) so the node runtime
-can raise them without importing this package; re-exported here as the
-public names of the fork API.
+Defined next to the transport layer (``repro.net``) so the node runtime and
+every backend can raise them without importing this package; re-exported
+here as the public names of the fork API.
 """
-from repro.core.network import AccessRevoked, LeaseExpired
+from repro.net import AccessRevoked, LeaseExpired
 
 __all__ = ["AccessRevoked", "LeaseExpired"]

@@ -53,11 +53,17 @@ class ForkHandle:
     # -- serialization ------------------------------------------------------
 
     def to_dict(self) -> dict:
-        return {k: getattr(self, k) for k in _WIRE_FIELDS}
+        d = {k: getattr(self, k) for k in _WIRE_FIELDS}
+        if math.isinf(d["lease_deadline"]):
+            d["lease_deadline"] = None      # RFC 8259 JSON has no Infinity
+        return d
 
     @classmethod
     def from_dict(cls, d: dict, runtime=None) -> "ForkHandle":
-        return cls(runtime=runtime, **{k: d[k] for k in _WIRE_FIELDS})
+        d = {k: d[k] for k in _WIRE_FIELDS}
+        if d["lease_deadline"] is None:
+            d["lease_deadline"] = math.inf
+        return cls(runtime=runtime, **d)
 
     def to_json(self) -> str:
         return json.dumps(self.to_dict())
@@ -84,7 +90,14 @@ class ForkHandle:
         return time.monotonic()
 
     def remaining(self, now: Optional[float] = None) -> float:
-        """Seconds of lease left (inf for unbounded leases)."""
+        """Seconds of lease left (inf for unbounded leases).
+
+        Advisory only: ``lease_deadline`` is absolute on the PARENT's clock.
+        Bound handles read that clock; an unbound (deserialized) handle
+        falls back to this process's ``time.monotonic()``, which is only
+        meaningful when producer and consumer share it (the in-process
+        simulation norm) — pass ``now`` explicitly otherwise.  The parent's
+        check at auth is always authoritative."""
         if math.isinf(self.lease_deadline):
             return math.inf
         return self.lease_deadline - self._now(now)
@@ -118,14 +131,19 @@ class ForkHandle:
                        parent.auth_seed, self.handler_id, self.auth_key,
                        self.generation)
 
-        # 2) descriptor fetch: one one-sided READ (fast path) or RPC (ablation)
-        if policy.descriptor_fetch == "rdma":
-            net.rdma_read_blob(child_node.node_id, self.parent_node,
-                               info["nbytes"])
+        # 2) descriptor fetch through the named transport: one-sided backends
+        #    read the blob RNIC-style behind its own DC key (a reclaimed
+        #    seed's descriptor is unreadable, like any VMA); two-sided
+        #    backends RPC the parent daemon
+        dt = net.transport_obj(policy.descriptor_fetch)
+        if dt.one_sided:
+            net.read_blob(child_node.node_id, self.parent_node,
+                          info["nbytes"], info["desc_key"], transport=dt.name)
             blob = parent.seed_blob(self.handler_id)
         else:
             blob = net.rpc(child_node.node_id, self.parent_node,
-                           info["nbytes"], parent.seed_blob, self.handler_id)
+                           info["nbytes"], parent.seed_blob, self.handler_id,
+                           info["desc_key"], transport=dt.name)
         desc = Descriptor.from_bytes(blob)
 
         if policy.sibling_cache is not None:
@@ -142,6 +160,7 @@ class ForkHandle:
         inst = ModelInstance(child_node, desc.arch, desc.kind, aspace,
                              desc.leaf_paths, desc.extra["leaf_names"],
                              ancestry, dict(desc.registers))
+        inst.page_transport = policy.page_fetch
         if not policy.lazy:
             inst.ensure_all(prefetch=0)
         inst.default_prefetch = policy.prefetch
@@ -214,6 +233,8 @@ def prepare_fork(node, instance, lease: Optional[float] = None) -> ForkHandle:
     now = node.clock()
     deadline = math.inf if lease is None else now + lease
     prepared_keys = {name: node.take_dc_target() for name in instance.aspace}
+    desc_key = node.take_dc_target()    # guards the descriptor blob itself
+    instance.frames_published = True    # remote nodes may now cache our frames
     desc = Descriptor(
         arch=instance.arch,
         kind=instance.kind,
@@ -230,7 +251,7 @@ def prepare_fork(node, instance, lease: Optional[float] = None) -> ForkHandle:
     node.register_seed(handler_id, SeedEntry(
         descriptor=desc, blob=blob, auth_key=auth_key, instance=instance,
         keys=prepared_keys, created=now, lease_deadline=deadline,
-        lease_duration=lease))
+        lease_duration=lease, desc_key=desc_key))
     return ForkHandle(parent_node=node.node_id, handler_id=handler_id,
                       auth_key=auth_key, lease_deadline=deadline,
                       generation=0, created=now, runtime=node)

@@ -1,14 +1,18 @@
 """ForkPolicy — one validated object for every resume-time knob.
 
-Replaces the four kwargs (``lazy``, ``prefetch``, ``descriptor_fetch`` and
-the node-level sibling-cache flag) that callers used to re-thread by hand.
+Replaces the kwargs (``lazy``, ``prefetch``, descriptor/page transport
+selection and the node-level sibling-cache flag) that callers used to
+re-thread by hand.  Transport choices are names resolved against the
+:mod:`repro.net` registry, so the same fork protocol runs over any
+registered fabric (``dct``, ``rc``, ``rpc``, ``tpu_ici``, ``shared_fs``,
+or a custom backend).
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Optional
 
-DESCRIPTOR_FETCH_MODES = ("rdma", "rpc")
+from repro.net import resolve_transport
 
 
 @dataclasses.dataclass(frozen=True)
@@ -17,7 +21,12 @@ class ForkPolicy:
 
     lazy             : map pages on demand (COW) instead of eager full copy
     prefetch         : adjacent pages pulled per fault (0 = none)
-    descriptor_fetch : "rdma" one-sided read (fast path) | "rpc" (ablation)
+    descriptor_fetch : transport name for the descriptor transfer (repro.net
+                       registry); None = the child network's default backend.
+                       One-sided backends read the blob RNIC-style behind its
+                       DC key; two-sided backends RPC the parent daemon.
+    page_fetch       : transport name for first-touch paging; None = the
+                       network's default backend
     sibling_cache    : True/False toggles the child node's sibling page
                        cache for this and later forks; None keeps the
                        node's current setting
@@ -25,7 +34,8 @@ class ForkPolicy:
 
     lazy: bool = True
     prefetch: int = 0
-    descriptor_fetch: str = "rdma"
+    descriptor_fetch: Optional[str] = None
+    page_fetch: Optional[str] = None
     sibling_cache: Optional[bool] = None
 
     def __post_init__(self):
@@ -37,10 +47,17 @@ class ForkPolicy:
         if not isinstance(self.prefetch, int) or isinstance(self.prefetch, bool) \
                 or self.prefetch < 0:
             raise ValueError(f"prefetch must be an int >= 0, got {self.prefetch!r}")
-        if self.descriptor_fetch not in DESCRIPTOR_FETCH_MODES:
-            raise ValueError(
-                f"descriptor_fetch must be one of {DESCRIPTOR_FETCH_MODES}, "
-                f"got {self.descriptor_fetch!r}")
+        for field in ("descriptor_fetch", "page_fetch"):
+            name = getattr(self, field)
+            if name is None:
+                continue
+            if not isinstance(name, str):
+                raise ValueError(
+                    f"{field} must be None or a transport name, got {name!r}")
+            try:
+                resolve_transport(name)
+            except ValueError as e:
+                raise ValueError(f"{field}: {e}") from None
         if self.sibling_cache is not None and not isinstance(self.sibling_cache, bool):
             raise ValueError(
                 f"sibling_cache must be None or a bool, got {self.sibling_cache!r}")

@@ -77,19 +77,26 @@ def build_fork_tree(root: "ForkHandle", nodes: Sequence,
     tree = ForkTree(root=root, degree=tree_degree)
     servers = deque([[root, 0, 0]])     # [handle, children_served, level]
     promotable = deque()                # (child instance, its level), BFS order
-    for node in nodes:
-        while servers and servers[0][1] >= tree_degree:
-            servers.popleft()
-        if not servers:
-            inst, level = promotable.popleft()
-            reseed = inst.node.prepare_fork(inst, lease=child_lease)
-            tree.seeds.append(reseed)
-            servers.append([reseed, 0, level])
-        server = servers[0]
-        child = server[0].resume_on(node, policy)
-        server[1] += 1
-        tree.children.append(child)
-        tree.levels.append(server[2] + 1)
-        tree.edges.append((server[0], child))
-        promotable.append((child, server[2] + 1))
+    try:
+        for node in nodes:
+            while servers and servers[0][1] >= tree_degree:
+                servers.popleft()
+            if not servers:
+                inst, level = promotable.popleft()
+                reseed = inst.node.prepare_fork(inst, lease=child_lease)
+                tree.seeds.append(reseed)
+                servers.append([reseed, 0, level])
+            server = servers[0]
+            child = server[0].resume_on(node, policy)
+            server[1] += 1
+            tree.children.append(child)
+            tree.levels.append(server[2] + 1)
+            tree.edges.append((server[0], child))
+            promotable.append((child, server[2] + 1))
+    except BaseException:
+        # a failed fan-out must not leak re-seeds (SeedEntry + DC targets)
+        # or orphaned children the caller has no handle on — reclaim the
+        # partial tree (never the root) before surfacing the error
+        tree.close(free_instances=True)
+        raise
     return tree

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import get_arch
 from repro.core.instance import ModelInstance
-from repro.core.network import Network
+from repro.net import Network
 from repro.fork import ForkPolicy
 from repro.models import lm
 from repro.platform.node import NodeRuntime

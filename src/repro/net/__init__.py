@@ -1,0 +1,31 @@
+"""repro.net — the pluggable data plane.
+
+One :class:`Transport` interface (``read_pages`` / ``read_blob`` / ``rpc``,
+capability flags, per-backend metering) behind a name-keyed registry, with
+:class:`Network` as a thin router (membership + DC-target access control +
+meter aggregation).  Built-in backends: ``dct``, ``rc``, ``rpc``,
+``tpu_ici``, ``shared_fs`` — see ``docs/transport.md``.
+"""
+from repro.net.errors import AccessRevoked, LeaseExpired
+from repro.net.model import NetModel
+from repro.net.network import Network
+from repro.net.transport import (Transport, register_transport,
+                                 resolve_transport, transport_names)
+from repro.net.backends import (DctTransport, RcTransport, RpcTransport,
+                                SharedFsTransport, TpuIciTransport)
+
+__all__ = [
+    "AccessRevoked",
+    "LeaseExpired",
+    "NetModel",
+    "Network",
+    "Transport",
+    "register_transport",
+    "resolve_transport",
+    "transport_names",
+    "DctTransport",
+    "RcTransport",
+    "RpcTransport",
+    "TpuIciTransport",
+    "SharedFsTransport",
+]

@@ -1,0 +1,11 @@
+"""Data-/control-plane exceptions shared by every transport backend."""
+
+
+class AccessRevoked(PermissionError):
+    """One-sided access rejected: the DC target is gone or the handle's
+    generation was revoked at the parent (§5.2 connection-based control)."""
+
+
+class LeaseExpired(PermissionError):
+    """The seed's lease ran out before the child authenticated — the parent
+    refuses resume, mirroring rFaaS-style leased capabilities."""

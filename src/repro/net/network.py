@@ -1,0 +1,146 @@
+"""Network — a thin router over the transport registry.
+
+The network now owns exactly three things:
+
+* **membership** — which nodes are up (``register`` / ``unregister``);
+* **DC-target access control** — the (node, key) registry every read is
+  admitted against, one key per VMA *and per descriptor blob*;
+* **meter aggregation** — one Counter + sim clock that all transports
+  charge into, with per-backend ``{name}.bytes`` / ``{name}.ops`` keys next
+  to the legacy category aggregates.
+
+All data movement dispatches through a named :class:`~repro.net.transport.
+Transport` from the registry: ``read_pages`` (paging fast path),
+``read_blob`` (descriptor fetch) and ``rpc`` (two-sided control plane /
+fallback daemon).  ``transport=None`` means the network's default backend.
+"""
+from __future__ import annotations
+
+from collections import Counter
+from typing import Dict, Optional
+
+from repro.net import backends as _backends   # noqa: F401  (registers built-ins)
+from repro.net.errors import AccessRevoked
+from repro.net.model import NetModel
+from repro.net.transport import Transport, resolve_transport, transport_names
+
+
+class Network:
+    def __init__(self, model: Optional[NetModel] = None, transport: str = "dct"):
+        resolve_transport(transport)        # unknown name -> ValueError
+        self.model = model or NetModel()
+        self.transport = transport          # default backend name
+        self.nodes: Dict[str, "object"] = {}
+        self.meter = Counter()
+        self.sim_time = 0.0
+        self._transports: Dict[str, Transport] = {}
+        self._connections = set()           # (transport, src, dst) live pairs
+        # DC targets: (node_id, dc_key) -> True while valid
+        self._dc_targets: Dict[tuple, bool] = {}
+        self._next_key = 1
+
+    # -- transport registry ----------------------------------------------------
+
+    def transport_obj(self, name: Optional[str] = None) -> Transport:
+        """The (lazily instantiated) backend for ``name`` (None = default)."""
+        name = name or self.transport
+        t = self._transports.get(name)
+        if t is None:
+            t = resolve_transport(name)(self)
+            self._transports[name] = t
+        return t
+
+    # -- membership -----------------------------------------------------------
+
+    def register(self, node) -> None:
+        self.nodes[node.node_id] = node
+
+    def unregister(self, node_id: str) -> None:
+        self.nodes.pop(node_id, None)
+        for k in [k for k in self._dc_targets if k[0] == node_id]:
+            del self._dc_targets[k]
+
+    def require_node(self, node_id: str):
+        node = self.nodes.get(node_id)
+        if node is None:
+            raise ConnectionError(f"node {node_id} is down")
+        return node
+
+    def drop_cached_frames(self, owner: str, dtype: str, frames) -> None:
+        """Broadcast sibling-cache invalidation: ``owner`` is freeing these
+        frames, so every node must forget (owner, dtype, frame) entries —
+        the reused frame indices would otherwise serve stale data.  Modeled
+        as free kernel-level coherence traffic (unmetered)."""
+        for node in self.nodes.values():
+            drop = getattr(node, "page_cache_drop_owner_frames", None)
+            if drop is not None:
+                drop(owner, dtype, frames)
+
+    # -- DC targets (access control) -------------------------------------------
+
+    def create_dc_target(self, node_id: str) -> int:
+        """Allocate a DC key guarding one VMA or blob (paper: 12 B child-side)."""
+        key = self._next_key
+        self._next_key += 1
+        self._dc_targets[(node_id, key)] = True
+        self.meter["dc_targets"] += 1
+        return key
+
+    def destroy_dc_target(self, node_id: str, key: int) -> None:
+        self._dc_targets.pop((node_id, key), None)
+
+    def target_valid(self, node_id: str, key: int) -> bool:
+        return self._dc_targets.get((node_id, key), False)
+
+    def check_target(self, node_id: str, key: int) -> None:
+        if not self.target_valid(node_id, key):
+            raise AccessRevoked(f"DC target {key}@{node_id} destroyed")
+
+    # -- connections ------------------------------------------------------------
+
+    def note_connection(self, transport: str, src: str, dst: str) -> bool:
+        """Record a (src, dst) pair for ``transport``; True if it is new
+        (i.e. the caller owes the setup cost)."""
+        key = (transport, src, dst)
+        if key in self._connections:
+            return False
+        self._connections.add(key)
+        return True
+
+    # -- data plane ---------------------------------------------------------------
+
+    def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int,
+                   transport: Optional[str] = None):
+        """Read of `frames` from dst's pool over the named backend."""
+        return self.transport_obj(transport).read_pages(src, dst, dtype,
+                                                        frames, dc_key)
+
+    def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int,
+                  transport: Optional[str] = None) -> None:
+        """Metered blob fetch (descriptor transfer), DC-key guarded."""
+        return self.transport_obj(transport).read_blob(src, dst, nbytes,
+                                                       dc_key)
+
+    def rpc(self, src: str, dst: str, nbytes: int, fn, *args,
+            transport: Optional[str] = None, **kwargs):
+        """Two-sided RPC executed by the destination node (FaSST-style)."""
+        return self.transport_obj(transport).rpc(src, dst, nbytes, fn,
+                                                 *args, **kwargs)
+
+    # -- reporting -----------------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        return dict(self.meter) | {"sim_time": self.sim_time}
+
+    def per_backend(self) -> Dict[str, dict]:
+        """{backend: {bytes, ops, setups, setup_s}} for every registered
+        backend (zeros for backends this network never used)."""
+        out: Dict[str, dict] = {}
+        for name in transport_names():
+            out[name] = {k: self.meter.get(f"{name}.{k}", 0)
+                         for k in ("bytes", "ops", "setups", "setup_s")}
+        return out
+
+    def reset_meter(self) -> None:
+        self.meter.clear()
+        self.sim_time = 0.0

@@ -1,0 +1,170 @@
+"""Transport — the pluggable data-plane interface (§5.3, Fig. 18 ablation).
+
+MITOSIS's core claim is that remote-fork speed comes from the *choice* of
+data path: one-sided RDMA reads vs two-sided RPC vs distributed-FS
+checkpoints.  A ``Transport`` makes that choice a first-class, name-keyed
+object instead of string flags scattered through the data plane.  One
+interface sits behind all three traffic classes:
+
+``read_pages``   one VMA page gather out of the owner pool (paging fast path)
+``read_blob``    an opaque blob fetch (descriptor transfer)
+``rpc``          a two-sided call executed by the destination (control plane,
+                 fallback daemon, message baselines)
+
+Every backend declares capability flags (``one_sided``: reads bypass the
+owner's CPU, like an RNIC/DMA engine; ``connection_oriented``: pays a
+per-(src, dst) setup cost) and derives its per-op latency and per-byte
+bandwidth from the shared :class:`~repro.net.model.NetModel`.  Access
+control is identical across backends: every read — page or descriptor —
+is admitted iff its DC key is a live target at the network, so a reclaimed
+seed is unreadable over *any* fabric, not just RDMA.
+
+Metering is aggregated at the :class:`~repro.net.network.Network` but tagged
+per backend: each op charges ``{name}.bytes`` / ``{name}.ops`` (plus
+``{name}.setups`` / ``{name}.setup_s`` for connection-oriented backends)
+alongside the legacy category aggregates (``rdma_*``, ``rpc_*``, ``ici_*``,
+``dfs_*``) that benchmarks and examples report.
+
+Registering a custom backend::
+
+    from repro.net import Transport, register_transport
+
+    @register_transport
+    class CxlTransport(Transport):
+        name = "cxl"
+        one_sided = True
+        legacy_meter = "rdma"
+        def op_latency(self):  return 300e-9
+        def bandwidth(self):   return 64e9
+
+``Network(transport="cxl")`` / ``ForkPolicy(page_fetch="cxl")`` then resolve
+it by name; unknown names raise ``ValueError`` listing what is registered.
+"""
+from __future__ import annotations
+
+import abc
+from typing import ClassVar, Dict, List, Optional, Type
+
+
+_REGISTRY: Dict[str, Type["Transport"]] = {}
+
+
+def register_transport(cls: Type["Transport"]) -> Type["Transport"]:
+    """Class decorator: key ``cls`` by its ``name`` in the global registry.
+    The required ClassVars are checked here so a malformed backend fails at
+    registration, not deep inside its first resume_on."""
+    name = getattr(cls, "name", None)
+    if not isinstance(name, str) or not name:
+        raise ValueError(f"transport class {cls!r} must define a `name` string")
+    if not isinstance(getattr(cls, "one_sided", None), bool):
+        raise ValueError(
+            f"transport {name!r} must define the `one_sided` bool ClassVar")
+    if not isinstance(getattr(cls, "legacy_meter", None), str):
+        raise ValueError(
+            f"transport {name!r} must define the `legacy_meter` str ClassVar "
+            "(aggregate category, e.g. 'rdma' or 'rpc')")
+    _REGISTRY[name] = cls
+    return cls
+
+
+def transport_names() -> List[str]:
+    """Sorted names of every registered transport backend."""
+    return sorted(_REGISTRY)
+
+
+def resolve_transport(name: str) -> Type["Transport"]:
+    """Look a backend class up by name; unknown names fail loudly."""
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown transport {name!r}; registered transports: "
+            f"{', '.join(transport_names())}") from None
+
+
+class Transport(abc.ABC):
+    """One data-plane fabric: cost model + data movement + capability flags.
+
+    Instances are created per :class:`Network` (``net.transport_obj(name)``)
+    and charge all traffic back into the network's meter/sim clock.
+    """
+
+    name: ClassVar[str]
+    one_sided: ClassVar[bool]                  # reads bypass the owner's CPU
+    connection_oriented: ClassVar[bool] = False  # pays setup per (src, dst)
+    legacy_meter: ClassVar[str]                # aggregate category: rdma|rpc|ici|dfs
+
+    def __init__(self, net):
+        self.net = net
+        self.model = net.model
+
+    # -- cost model ---------------------------------------------------------
+
+    def setup_cost(self) -> float:
+        """Seconds to bring up one (src, dst) connection (0 = connectionless)."""
+        return 0.0
+
+    @abc.abstractmethod
+    def op_latency(self) -> float:
+        """Seconds of fixed latency per read op."""
+
+    @abc.abstractmethod
+    def bandwidth(self) -> float:
+        """Bytes/second for bulk payload movement."""
+
+    def rpc_latency(self) -> float:
+        """Seconds of fixed latency per two-sided round trip."""
+        return self.model.rpc_lat
+
+    # -- data plane ---------------------------------------------------------
+
+    def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int):
+        """Read ``frames`` out of dst's pool.  Admitted iff (dst, dc_key) is
+        a live DC target — revoking the target kills access on EVERY backend."""
+        node = self.net.require_node(dst)
+        self.net.check_target(dst, dc_key)
+        self._setup(src, dst)
+        pages = node.pool.read_pages(dtype, frames)
+        nbytes = pages.size * pages.dtype.itemsize
+        self._charge("read", nbytes,
+                     self.op_latency() + nbytes / self.bandwidth())
+        return pages
+
+    def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int) -> None:
+        """Metered fetch of an opaque blob (descriptor transfer).  Guarded by
+        the blob's own DC key, exactly like a VMA."""
+        self.net.require_node(dst)
+        self.net.check_target(dst, dc_key)
+        self._setup(src, dst)
+        self._charge("read", nbytes,
+                     self.op_latency() + nbytes / self.bandwidth())
+
+    def rpc(self, src: str, dst: str, nbytes: int, fn, *args, **kwargs):
+        """Two-sided call executed by the destination node (FaSST-style)."""
+        self.net.require_node(dst)
+        self._charge("rpc", nbytes,
+                     self.rpc_latency() + nbytes / self.bandwidth())
+        return fn(*args, **kwargs)
+
+    # -- metering -----------------------------------------------------------
+
+    def _setup(self, src: str, dst: str) -> None:
+        if not self.connection_oriented:
+            return
+        if not self.net.note_connection(self.name, src, dst):
+            return
+        cost = self.setup_cost()
+        meter = self.net.meter
+        meter["conn_setups"] += 1
+        meter[f"{self.name}.setups"] += 1
+        meter[f"{self.name}.setup_s"] += cost
+        self.net.sim_time += cost
+
+    def _charge(self, kind: str, nbytes: int, seconds: float) -> None:
+        meter = self.net.meter
+        meter[f"{self.name}.bytes"] += nbytes
+        meter[f"{self.name}.ops"] += 1
+        category = "rpc" if kind == "rpc" else self.legacy_meter
+        meter[f"{category}_bytes"] += nbytes
+        meter[f"{category}_ops"] += 1
+        self.net.sim_time += seconds

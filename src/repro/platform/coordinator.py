@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import Counter
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -53,7 +54,13 @@ class Coordinator:
         self.seed_store: Dict[str, ForkHandle] = {}    # func -> leased handle
         self.fork_trees: Dict[str, ForkTreeNode] = {}
         self.cached: Dict[str, List[tuple]] = {}       # func -> [(inst, ts)]
+        # per-function lease churn (renewals/expiries/revocations) for
+        # fig20-style spike replays; surfaced by gc()
+        self.lease_telemetry: Dict[str, Counter] = {}
         self._rr = 0
+
+    def _lease_event(self, func: str, event: str, n: int = 1) -> None:
+        self.lease_telemetry.setdefault(func, Counter())[event] += n
 
     # -- registry ---------------------------------------------------------
 
@@ -101,7 +108,10 @@ class Coordinator:
         inst = None
         if policy == "cache":
             pool = self.cached.get(func, [])
-            # local cached instance (unpause): only usable on its own node
+            # local cached instance (unpause): only usable on its own node;
+            # husks (freed underneath the pool, e.g. by seed-expiry GC with
+            # free_instance=True) are dropped, never handed out
+            self.cached[func] = pool = [(c, ts) for c, ts in pool if c.aspace]
             for i, (cand, ts) in enumerate(pool):
                 if cand.node is node:
                     inst = pool.pop(i)[0]
@@ -152,22 +162,51 @@ class Coordinator:
         return (handle.parent_node in self.network.nodes
                 and handle.alive and not handle.expired)
 
-    def renew_seed(self, func: str) -> None:
+    def _live_handle(self, func: str) -> Optional[ForkHandle]:
+        """The store's handle for ``func`` iff its seed is still registered
+        at the parent; a handle reclaimed underneath the store is dropped
+        (and telemetered as "reclaimed")."""
         handle = self.seed_store.get(func)
         if handle is None:
-            return
+            return None
         if not handle.alive:
-            del self.seed_store[func]       # reclaimed underneath the store
+            del self.seed_store[func]
+            self._lease_event(func, "reclaimed")
+            return None
+        return handle
+
+    def renew_seed(self, func: str) -> None:
+        handle = self._live_handle(func)
+        if handle is None:
             return
         handle.renew()
+        self._lease_event(func, "renewals")
+
+    def revoke_seed(self, func: str) -> Optional[ForkHandle]:
+        """Invalidate every outstanding handle for ``func``'s seed (bump its
+        generation); the store keeps serving through the fresh handle.
+        Returns None if there is nothing to revoke (no seed, or reclaimed
+        underneath the store — dropped like renew_seed does)."""
+        handle = self._live_handle(func)
+        if handle is None:
+            return None
+        fresh = handle.revoke()
+        self.seed_store[func] = fresh
+        self._lease_event(func, "revocations")
+        return fresh
 
     def gc(self) -> dict:
         """Timeout-based reclamation: expired long-lived seeds, stale cached
-        containers, and node-side dangling short-lived seeds (§6.3)."""
+        containers, and node-side dangling short-lived seeds (§6.3).  The
+        returned dict also carries the accumulated lease telemetry:
+        ``lease`` (per-function renew/expiry/revocation counters) and
+        ``lease_nodes`` (per-node parent-side counters)."""
         now = self.clock()
         freed = {"seeds": 0, "cached": 0, "dangling": 0}
         for func, handle in list(self.seed_store.items()):
             if handle.expired or not handle.alive:
+                self._lease_event(
+                    func, "expiries" if handle.expired else "reclaimed")
                 handle.reclaim(free_instance=True)   # no-op if already gone
                 del self.seed_store[func]
                 freed["seeds"] += 1
@@ -175,7 +214,8 @@ class Coordinator:
             keep = []
             for inst, ts in pool:
                 if now - ts >= DEFAULT_CACHE_KEEPALIVE:
-                    inst.free()
+                    if inst.aspace and not self._pinned_as_seed(inst):
+                        inst.free()
                     freed["cached"] += 1
                 else:
                     keep.append((inst, ts))
@@ -186,6 +226,9 @@ class Coordinator:
                 if now - entry.created >= MAX_FUNCTION_LIFETIME:
                     node.reclaim_seed(hid, free_instance=False)
                     freed["dangling"] += 1
+        freed["lease"] = {f: dict(c) for f, c in self.lease_telemetry.items()}
+        freed["lease_nodes"] = {i: dict(n.lease_stats)
+                                for i, n in self.nodes.items()}
         return freed
 
     # -- fork trees (short-lived seeds, §6.3) -----------------------------------

@@ -11,14 +11,14 @@ import itertools
 import math
 import secrets
 import time
-from collections import OrderedDict
+from collections import Counter, OrderedDict
 from typing import Dict, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.network import AccessRevoked, LeaseExpired
 from repro.memory.pool import PAGE_ELEMS, PagePool
+from repro.net import AccessRevoked, LeaseExpired
 
 DEFAULT_PAGE_CACHE_CAP = 65536     # sibling-cache entries (pages), LRU-bounded
 
@@ -26,12 +26,14 @@ DEFAULT_PAGE_CACHE_CAP = 65536     # sibling-cache entries (pages), LRU-bounded
 class SeedEntry:
     def __init__(self, descriptor, blob, auth_key, instance, keys, created,
                  lease_deadline: float = math.inf,
-                 lease_duration: Optional[float] = None, generation: int = 0):
+                 lease_duration: Optional[float] = None, generation: int = 0,
+                 desc_key: int = -1):
         self.descriptor = descriptor
         self.blob = blob
         self.auth_key = auth_key
         self.instance = instance
         self.keys = keys                  # vma name -> DC key
+        self.desc_key = desc_key          # DC key guarding the blob itself
         self.created = created
         self.lease_deadline = lease_deadline   # absolute (this node's clock)
         self.lease_duration = lease_duration   # seconds; None = unbounded
@@ -42,7 +44,8 @@ class SeedEntry:
 class NodeRuntime:
     def __init__(self, node_id: str, network, page_elems: int = PAGE_ELEMS,
                  cache_enabled: bool = False, clock=time.monotonic,
-                 page_cache_cap: int = DEFAULT_PAGE_CACHE_CAP):
+                 page_cache_cap: int = DEFAULT_PAGE_CACHE_CAP,
+                 page_cache_cap_bytes: Optional[int] = None):
         self.node_id = node_id
         self.network = network
         self.pool = PagePool(page_elems)
@@ -51,8 +54,16 @@ class NodeRuntime:
         self.seeds: Dict[int, SeedEntry] = {}
         self.cache_enabled = cache_enabled
         self._page_cache: "OrderedDict[tuple, int]" = OrderedDict()
+        # reverse index (dtype, local_frame) -> cache key, so freeing an
+        # instance invalidates its frames in O(frames), not O(cache)
+        self._page_cache_rev: Dict[tuple, tuple] = {}
+        self._page_cache_bytes = 0
         self.page_cache_cap = page_cache_cap
+        self.page_cache_cap_bytes = page_cache_cap_bytes  # None = unbounded
         self.page_cache_stats = {"hits": 0, "misses": 0, "evictions": 0}
+        # per-node lease telemetry (renewals/expiries/revocations), rolled
+        # up per-function by Coordinator.gc()
+        self.lease_stats = Counter()
         self._dc_pool: list = []
         self._swapped: Dict[tuple, np.ndarray] = {}
         self._iid = itertools.count()
@@ -90,7 +101,7 @@ class NodeRuntime:
                   generation: int = 0) -> dict:
         """Authentication RPC (§5.2 + rFaaS leases): validates the id/key,
         the handle's revocation generation and the lease deadline, then
-        returns the descriptor's size for the follow-up one-sided read."""
+        returns the descriptor's size and DC key for the follow-up read."""
         e = self.seeds.get(handler_id)
         if e is None or e.auth_key != auth_key:
             raise PermissionError(f"bad seed credentials for {handler_id}")
@@ -99,10 +110,11 @@ class NodeRuntime:
                 f"seed {handler_id}: handle generation {generation} revoked "
                 f"(current {e.generation})")
         if self.clock() >= e.lease_deadline:
+            self.lease_stats["expiries"] += 1
             raise LeaseExpired(
                 f"seed {handler_id}: lease expired at {e.lease_deadline:.3f}")
         e.forks += 1
-        return {"nbytes": len(e.blob)}
+        return {"nbytes": len(e.blob), "desc_key": e.desc_key}
 
     def renew_seed(self, handler_id: int,
                    extend: Optional[float] = None) -> float:
@@ -120,14 +132,21 @@ class NodeRuntime:
         now = self.clock()
         e.created = now
         e.lease_deadline = math.inf if duration is None else now + duration
+        self.lease_stats["renewals"] += 1
         return e.lease_deadline
 
     def revoke_seed(self, handler_id: int) -> int:
         """Bump the seed's revocation generation: every outstanding handle
-        (and legacy tuple credential) dies at the next auth.  Returns the
-        new generation."""
+        dies at the next auth.  The descriptor's DC key is rotated too, so
+        a revoked holder who learned it at an earlier auth can no longer
+        read the blob (and harvest the VMA keys inside) — the fresh
+        generation re-learns the new key at auth.  Returns the new
+        generation."""
         e = self.seeds[handler_id]
         e.generation += 1
+        self.network.destroy_dc_target(self.node_id, e.desc_key)
+        e.desc_key = self.take_dc_target()
+        self.lease_stats["revocations"] += 1
         return e.generation
 
     def reclaim_seed(self, handler_id: int,
@@ -139,11 +158,23 @@ class NodeRuntime:
             return
         for key in entry.keys.values():
             self.network.destroy_dc_target(self.node_id, key)
+        self.network.destroy_dc_target(self.node_id, entry.desc_key)
         if free_instance and entry.instance is not None:
             entry.instance.free()
 
-    def seed_blob(self, handler_id: int) -> bytes:
-        return self.seeds[handler_id].blob
+    def seed_blob(self, handler_id: int,
+                  desc_key: Optional[int] = None) -> bytes:
+        """Serve a seed's descriptor blob.  The daemon enforces the blob's
+        DC key like the RNIC does for one-sided reads, so a reclaimed
+        seed's descriptor raises AccessRevoked over two-sided fabrics too."""
+        e = self.seeds.get(handler_id)
+        if e is None:
+            raise AccessRevoked(f"seed {handler_id} reclaimed; descriptor gone")
+        if desc_key is not None \
+                and not self.network.target_valid(self.node_id, desc_key):
+            raise AccessRevoked(
+                f"descriptor DC target {desc_key}@{self.node_id} destroyed")
+        return e.blob
 
     # -- fallback daemon (§5.4) -------------------------------------------------
 
@@ -174,9 +205,17 @@ class NodeRuntime:
                 self.network.destroy_dc_target(self.node_id, e.keys[name])
 
     # -- sibling page cache (MITOSIS+cache, §5.4 optimizations) -------------------
-    # LRU-bounded at page_cache_cap entries so a long-lived node can't grow
-    # the remote->local frame map without limit; evictions only forget the
+    # LRU-bounded at page_cache_cap entries AND (optionally) at
+    # page_cache_cap_bytes — eviction runs on whichever limit trips first,
+    # so multi-dtype workloads with fat pages can't blow past a byte budget
+    # that the entry cap alone would allow.  Evictions only forget the
     # mapping (the frames stay owned by whichever instance fetched them).
+
+    def _page_cache_entry_bytes(self, key: tuple) -> int:
+        return self.pool.page_elems * np.dtype(key[1]).itemsize
+
+    def page_cache_bytes(self) -> int:
+        return self._page_cache_bytes
 
     def page_cache_get(self, owner: str, dtype: str, frame: int) -> Optional[int]:
         if not self.cache_enabled:
@@ -194,14 +233,59 @@ class NodeRuntime:
         if not self.cache_enabled:
             return
         key = (owner, jnp.dtype(dtype).name, int(frame))
-        self._page_cache[key] = local
-        self._page_cache.move_to_end(key)
-        while len(self._page_cache) > self.page_cache_cap:
-            self._page_cache.popitem(last=False)
+        old_local = self._page_cache.get(key)
+        if old_local is None:
+            self._page_cache_bytes += self._page_cache_entry_bytes(key)
+        else:
+            self._page_cache_rev.pop((key[1], old_local), None)
+        rev_key = (key[1], int(local))
+        shadowed = self._page_cache_rev.get(rev_key)
+        if shadowed is not None:
+            # another entry already maps this local frame; evict it rather
+            # than leave it un-invalidatable when the frame is freed
+            del self._page_cache[shadowed]
+            self._page_cache_bytes -= self._page_cache_entry_bytes(shadowed)
             self.page_cache_stats["evictions"] += 1
+        self._page_cache[key] = local
+        self._page_cache_rev[rev_key] = key
+        self._page_cache.move_to_end(key)
+        while len(self._page_cache) > self.page_cache_cap or (
+                self.page_cache_cap_bytes is not None
+                and self._page_cache_bytes > self.page_cache_cap_bytes):
+            old_key, old_local = self._page_cache.popitem(last=False)
+            self._page_cache_rev.pop((old_key[1], old_local), None)
+            self._page_cache_bytes -= self._page_cache_entry_bytes(old_key)
+            self.page_cache_stats["evictions"] += 1
+
+    def page_cache_invalidate_frames(self, dtype: str, frames) -> None:
+        """Drop cache entries whose LOCAL frame is being returned to the
+        pool (the fetching instance freed it) — a later alloc may reuse the
+        frame index for unrelated data, so serving it would be silent
+        corruption."""
+        dt = jnp.dtype(dtype).name
+        for f in frames:
+            key = self._page_cache_rev.pop((dt, int(f)), None)
+            if key is not None:
+                del self._page_cache[key]
+                self._page_cache_bytes -= self._page_cache_entry_bytes(key)
+
+    def page_cache_drop_owner_frames(self, owner: str, dtype: str,
+                                     frames) -> None:
+        """Drop cache entries keyed on the OWNER's frames — broadcast by the
+        network when the owner frees them, since a reused owner frame would
+        make the (owner, dtype, frame) key serve a different seed's data."""
+        dt = jnp.dtype(dtype).name
+        for f in frames:
+            key = (owner, dt, int(f))
+            local = self._page_cache.pop(key, None)
+            if local is not None:
+                self._page_cache_rev.pop((dt, local), None)
+                self._page_cache_bytes -= self._page_cache_entry_bytes(key)
 
     def clear_page_cache(self) -> None:
         self._page_cache.clear()
+        self._page_cache_rev.clear()
+        self._page_cache_bytes = 0
 
     # -- failure ------------------------------------------------------------------
 

@@ -4,7 +4,7 @@ import jax
 import pytest
 
 from repro.configs.base import get_arch, reduce_for_smoke
-from repro.core.network import Network
+from repro.net import Network
 from repro.models import lm
 from repro.platform.coordinator import Coordinator, FunctionDef
 from repro.platform.node import NodeRuntime

@@ -9,7 +9,7 @@ import numpy as np
 import pytest
 
 from repro.core.instance import ModelInstance
-from repro.core.network import AccessRevoked
+from repro.net import AccessRevoked
 from repro.fork import ForkPolicy
 from repro.models import lm
 

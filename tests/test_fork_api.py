@@ -1,17 +1,16 @@
 """Lease-based ForkHandle control plane: lease expiry/renewal, revocation
 generations, fan-out fork trees, handle serialization, policy validation,
-deprecated-shim equivalence, and the coordinator lifecycle fixes that ride
-on the new API (pick_node, seed-instance pinning, bounded page cache)."""
+lease telemetry, and the coordinator lifecycle fixes that ride on the API
+(pick_node, seed-instance pinning, bounded page cache)."""
+import importlib.util
 import math
-import warnings
 
 import jax
 import numpy as np
 import pytest
 
-from repro.core import fork as legacy_fork
 from repro.core.instance import ModelInstance
-from repro.core.network import Network
+from repro.net import Network
 from repro.fork import (AccessRevoked, ForkHandle, ForkPolicy, ForkTree,
                         LeaseExpired)
 from repro.platform.node import NodeRuntime
@@ -103,17 +102,18 @@ def test_revoke_bumps_generation(leased_cluster, hello_cfg, hello_params):
     newer.resume_on(nodes[2])
 
 
-def test_revoke_kills_legacy_tuple_credentials(leased_cluster, hello_cfg,
+def test_revoke_kills_rebuilt_wire_credentials(leased_cluster, hello_cfg,
                                                hello_params):
+    """A handle rebuilt from raw wire credentials (the old tuple-era attack
+    surface) dies at auth after a revoke, like any outstanding copy."""
     net, nodes, clock = leased_cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
     handle = nodes[0].prepare_fork(parent)
     handle.revoke()
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        with pytest.raises(AccessRevoked):
-            legacy_fork.fork_resume(nodes[1], "node0", handle.handler_id,
-                                    handle.auth_key)
+    rebuilt = ForkHandle(parent_node="node0", handler_id=handle.handler_id,
+                         auth_key=handle.auth_key)
+    with pytest.raises(AccessRevoked):
+        rebuilt.resume_on(nodes[1])
 
 
 # ---------------------------------------------------------------------------
@@ -150,11 +150,32 @@ def test_handle_serialization_roundtrip(leased_cluster, hello_cfg, hello_params)
     assert nodes[0].seeds[handle.handler_id].lease_deadline == pytest.approx(99.0)
 
 
+def test_unbounded_handle_serializes_to_strict_json(leased_cluster, hello_cfg,
+                                                    hello_params):
+    """lease=None handles must produce RFC-8259 JSON (no bare Infinity) so
+    non-Python control planes can parse the wire record."""
+    import json
+
+    def _reject_constant(name):
+        raise ValueError(f"non-strict JSON constant {name!r} on the wire")
+
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)          # unbounded lease
+    s = handle.to_json()
+    json.loads(s, parse_constant=_reject_constant)  # strict parse succeeds
+    wire = ForkHandle.from_json(s)
+    assert wire.lease_deadline == math.inf and wire == handle
+    wire.resume_on(nodes[1])
+
+
 def test_policy_validation():
     with pytest.raises(ValueError):
         ForkPolicy(prefetch=-1)
     with pytest.raises(ValueError):
         ForkPolicy(descriptor_fetch="bogus")
+    with pytest.raises(ValueError):
+        ForkPolicy(page_fetch="bogus")
     with pytest.raises(ValueError):
         ForkPolicy(lazy=1)
     with pytest.raises(TypeError):
@@ -199,6 +220,25 @@ def test_fan_out_64_children_degree_8(leased_cluster, hello_cfg, hello_params):
         handle.fan_out([nodes[1]], tree_degree=8)
 
 
+def test_fan_out_failure_reclaims_partial_tree(leased_cluster, hello_cfg,
+                                               hello_params):
+    """A fan-out that fails mid-build must not leak re-seeds or orphaned
+    children: the partial tree is reclaimed before the error surfaces."""
+    net, nodes, clock = leased_cluster
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    # degree 2 + a poison third target: root serves 2, one child gets
+    # promoted to a re-seed, then resume_on(None) blows up
+    with pytest.raises(AttributeError):
+        handle.fan_out([nodes[1], nodes[2], None], tree_degree=2)
+    assert list(nodes[0].seeds) == [handle.handler_id]  # root survives
+    for n in nodes[1:]:
+        assert not n.seeds                              # no leaked re-seeds
+    assert not any(n.instances for n in nodes[1:])      # children freed
+    # the root still serves after the failed fan-out
+    handle.resume_on(nodes[3])
+
+
 def test_fan_out_as_context_manager(leased_cluster, hello_cfg, hello_params):
     net, nodes, clock = leased_cluster
     parent = _mk_parent(nodes[0], hello_cfg, hello_params)
@@ -212,52 +252,35 @@ def test_fan_out_as_context_manager(leased_cluster, hello_cfg, hello_params):
 
 
 # ---------------------------------------------------------------------------
-# deprecated shims
+# deprecated shims: removed after their one-release grace period
 # ---------------------------------------------------------------------------
 
 
-def test_shims_warn_and_delegate(cluster, hello_cfg, hello_params):
-    net, nodes = cluster
-    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-    with pytest.deprecated_call():
-        hid, key = legacy_fork.fork_prepare(nodes[0], parent)
-    with pytest.deprecated_call():
-        child = legacy_fork.fork_resume(nodes[1], "node0", hid, key, lazy=True)
-    got = child.materialize_pytree()
-    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    with pytest.deprecated_call():
-        legacy_fork.fork_reclaim(nodes[0], hid)
-    assert hid not in nodes[0].seeds
+def test_tuple_shim_module_is_gone():
+    """ROADMAP: the fork_prepare/fork_resume/fork_reclaim tuple shims were
+    to be removed one release after the handle migration.  Prove the module
+    stayed deleted (CI asserts the same before running the suite)."""
+    assert importlib.util.find_spec("repro.core.fork") is None
 
 
-def test_shim_equivalence_same_page_fault_stats(hello_cfg, hello_params):
-    """Old tuple API and new handle API drive the identical data path."""
-    def run_old():
-        net = Network()
-        nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
-        parent = _mk_parent(nodes[0], hello_cfg, hello_params)
-        with warnings.catch_warnings():
-            warnings.simplefilter("ignore", DeprecationWarning)
-            hid, key = legacy_fork.fork_prepare(nodes[0], parent)
-            child = legacy_fork.fork_resume(nodes[1], "node0", hid, key,
-                                            lazy=True, prefetch=2)
-        child.ensure_all()
-        return child.stats, dict(net.meter)
-
-    def run_new():
+def test_wire_credentials_drive_same_data_path(hello_cfg, hello_params):
+    """A handle rebuilt from raw wire fields (what the tuple API exposed)
+    drives the identical data path as the minted handle."""
+    def run(rebuild):
         net = Network()
         nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
         parent = _mk_parent(nodes[0], hello_cfg, hello_params)
         handle = nodes[0].prepare_fork(parent)
+        if rebuild:
+            handle = ForkHandle.from_dict(handle.to_dict())
         child = handle.resume_on(nodes[1], ForkPolicy(lazy=True, prefetch=2))
         child.ensure_all()
         return child.stats, dict(net.meter)
 
-    old_stats, old_meter = run_old()
-    new_stats, new_meter = run_new()
-    assert old_stats == new_stats
-    assert old_meter == new_meter
+    minted_stats, minted_meter = run(rebuild=False)
+    wire_stats, wire_meter = run(rebuild=True)
+    assert minted_stats == wire_stats
+    assert minted_meter == wire_meter
 
 
 # ---------------------------------------------------------------------------

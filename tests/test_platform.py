@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core.instance import ModelInstance
-from repro.core.network import Network
+from repro.net import Network
 from repro.models import lm
 from repro.platform.coordinator import Coordinator, FunctionDef
 from repro.platform.node import NodeRuntime

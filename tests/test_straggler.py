@@ -3,7 +3,7 @@ import jax
 import numpy as np
 
 from repro.core.instance import ModelInstance
-from repro.core.network import Network
+from repro.net import Network
 from repro.models import lm
 from repro.platform.node import NodeRuntime
 from repro.platform.straggler import StragglerMonitor

@@ -1,0 +1,536 @@
+"""The pluggable data-plane Transport API (repro.net): registry resolution,
+capability flags, uniform access control across backends, descriptor DC
+keys, per-backend metering, ForkPolicy transport fields, lease telemetry,
+and the byte-based sibling page-cache budget."""
+import numpy as np
+import pytest
+
+from repro.core.instance import ModelInstance
+from repro.fork import AccessRevoked, ForkPolicy
+from repro.net import (NetModel, Network, Transport, register_transport,
+                       resolve_transport, transport_names)
+from repro.platform.node import NodeRuntime
+
+from conftest import FakeClock
+
+BUILTIN = ("dct", "rc", "rpc", "shared_fs", "tpu_ici")
+
+
+def _mk_parent(node, cfg, params):
+    return ModelInstance.create(node, cfg.name, params, kind="weights")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_backends_registered():
+    assert set(BUILTIN) <= set(transport_names())
+    for name in BUILTIN:
+        cls = resolve_transport(name)
+        assert cls.name == name
+        assert isinstance(cls.one_sided, bool)
+
+
+def test_unknown_backend_error_lists_registered_names():
+    with pytest.raises(ValueError) as ei:
+        resolve_transport("infiniband-over-pigeon")
+    msg = str(ei.value)
+    assert "infiniband-over-pigeon" in msg
+    for name in BUILTIN:
+        assert name in msg
+
+
+def test_network_ctor_validates_transport_name():
+    with pytest.raises(ValueError, match="registered transports"):
+        Network(transport="bogus")
+    for name in BUILTIN:
+        assert Network(transport=name).transport == name
+
+
+def test_policy_transport_fields_validated_against_registry():
+    for field in ("page_fetch", "descriptor_fetch"):
+        with pytest.raises(ValueError) as ei:
+            ForkPolicy(**{field: "bogus"})
+        assert field in str(ei.value) and "dct" in str(ei.value)
+
+
+def test_policy_coerce_roundtrip_with_transport_fields():
+    p = ForkPolicy.coerce({"page_fetch": "tpu_ici",
+                           "descriptor_fetch": "shared_fs", "prefetch": 2})
+    assert p.page_fetch == "tpu_ici" and p.descriptor_fetch == "shared_fs"
+    assert ForkPolicy.coerce(p) is p
+    # defaults: None = the network's default backend
+    d = ForkPolicy.coerce(None)
+    assert d.page_fetch is None and d.descriptor_fetch is None
+
+
+def test_core_network_shim_warns_deprecation():
+    """The repro.core.network re-export follows the same warn-then-delete
+    cycle the tuple shims went through."""
+    import importlib
+    import sys
+    sys.modules.pop("repro.core.network", None)
+    with pytest.warns(DeprecationWarning, match="repro.net"):
+        importlib.import_module("repro.core.network")
+
+
+def test_malformed_backend_rejected_at_registration():
+    class NoFlags(Transport):
+        name = "_test_noflags"
+
+        def op_latency(self):
+            return 0.0
+
+        def bandwidth(self):
+            return 1.0
+
+    with pytest.raises(ValueError, match="one_sided"):
+        register_transport(NoFlags)
+    assert "_test_noflags" not in transport_names()
+
+
+def test_custom_backend_registration():
+    @register_transport
+    class _LoopbackTransport(Transport):
+        name = "_test_loopback"
+        one_sided = True
+        legacy_meter = "rdma"
+
+        def op_latency(self):
+            return 1e-9
+
+        def bandwidth(self):
+            return 1e12
+
+    try:
+        net = Network(transport="_test_loopback")
+        node = NodeRuntime("n0", net, page_elems=64)
+        key = net.create_dc_target("n0")
+        frames = node.pool.alloc("float32", 2)
+        net.read_pages("n1", "n0", "float32", frames, key)
+        assert net.meter["_test_loopback.bytes"] > 0
+    finally:
+        from repro.net import transport as transport_mod
+        transport_mod._REGISTRY.pop("_test_loopback", None)
+
+
+# ---------------------------------------------------------------------------
+# uniform access control: AccessRevoked on every backend after reclaim
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", BUILTIN)
+def test_reclaim_revokes_page_reads_on_every_backend(tname, hello_cfg,
+                                                     hello_params):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(lazy=True, page_fetch=tname))
+    name = child.leaf_names[0]
+    vma = child.aspace[name]
+    key = vma.dc_keys[1]
+    handle.reclaim()
+    with pytest.raises(AccessRevoked):
+        net.read_pages("node1", "node0", vma.dtype, vma.frames[:1], key,
+                       transport=tname)
+    # the instance-level fault handler degrades to the fallback daemon
+    child.ensure_tensor(name)
+    assert child.stats["pages_rpc"] > 0 and child.stats["pages_rdma"] == 0
+
+
+@pytest.mark.parametrize("tname", BUILTIN)
+def test_reclaimed_descriptor_unreadable_on_every_backend(tname, hello_cfg,
+                                                          hello_params):
+    """Descriptor blobs carry a DC key like any VMA: after reclaim the blob
+    read is rejected (the hole the old rdma_read_blob left open)."""
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    entry = nodes[0].seeds[handle.handler_id]
+    desc_key, nbytes = entry.desc_key, len(entry.blob)
+    assert net.target_valid("node0", desc_key)
+    net.read_blob("node1", "node0", nbytes, desc_key, transport=tname)  # live: ok
+    handle.reclaim()
+    with pytest.raises(AccessRevoked):
+        net.read_blob("node1", "node0", nbytes, desc_key, transport=tname)
+
+
+def test_reclaimed_descriptor_refused_by_two_sided_daemon(hello_cfg,
+                                                          hello_params):
+    """The parent daemon enforces the descriptor's DC key for RPC-path
+    fetches too: reclaim between auth and fetch surfaces as AccessRevoked,
+    not a KeyError, on two-sided backends."""
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    entry = nodes[0].seeds[handle.handler_id]
+    desc_key = entry.desc_key
+    assert nodes[0].seed_blob(handle.handler_id, desc_key) == entry.blob
+    handle.reclaim()
+    with pytest.raises(AccessRevoked):
+        nodes[0].seed_blob(handle.handler_id, desc_key)
+    # even a stale-keyed request against a live re-prepared seed is refused
+    handle2 = nodes[0].prepare_fork(parent)
+    with pytest.raises(AccessRevoked):
+        nodes[0].seed_blob(handle2.handler_id, desc_key)
+
+
+def test_coordinator_revoke_seed_handles_stale_store(platform):
+    net, nodes, coord, clock = platform
+    assert coord.revoke_seed("missing") is None     # nothing registered
+    coord.invoke("f")
+    coord.seed_store["f"].reclaim()                 # reclaimed underneath
+    assert coord.revoke_seed("f") is None
+    assert "f" not in coord.seed_store
+    # deliberate reclamation is telemetered as "reclaimed", never "expiries"
+    assert coord.lease_telemetry["f"]["reclaimed"] == 1
+    assert coord.lease_telemetry["f"]["expiries"] == 0
+    coord.deploy_seed("f", nodes[0])
+    fresh = coord.revoke_seed("f")
+    assert fresh is coord.seed_store["f"] and fresh.generation == 1
+
+
+def test_gc_cache_expiry_never_frees_pinned_seed(platform, hello_params):
+    """A cached container that doubles as the platform seed survives the
+    cache-expiry GC (only the seed-lease expiry may free it), so later
+    forks never materialize reused-frame garbage."""
+    import jax
+    net, nodes, coord, clock = platform
+    out, inst = coord.invoke("f", policy="cache", node=nodes[0])
+    coord.release("f", inst, policy="cache")    # pinned seed, also cached
+    handle = coord.seed_store["f"]
+    clock.t = 31.0                              # past cache keepalive
+    freed = coord.gc()
+    assert freed["cached"] == 1 and inst.aspace, "cache GC freed the seed"
+    out2, child = coord.invoke("f", policy="fork")
+    assert child.ancestry
+    got = child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    coord.release("f", child, policy="fork")
+    clock.t = handle.lease_deadline + 1         # now the lease path frees it
+    coord.gc()
+    assert not inst.aspace
+
+
+def test_cache_acquire_drops_husks(platform):
+    """An instance freed underneath the cached pool (seed reclaim with
+    free_instance=True) is dropped, never handed out."""
+    net, nodes, coord, clock = platform
+    out, inst = coord.invoke("f", policy="cache", node=nodes[0])
+    coord.release("f", inst, policy="cache")
+    coord.seed_store["f"].reclaim(free_instance=True)   # husks the pool entry
+    assert not inst.aspace
+    out2, inst2 = coord.invoke("f", policy="cache", node=nodes[0])
+    assert inst2 is not inst and inst2.aspace
+    assert out2["ok"]
+
+
+def test_revoke_rotates_descriptor_dc_key(hello_cfg, hello_params):
+    """A revoked handle holder who learned the descriptor's DC key at an
+    earlier auth cannot keep reading the blob (and the VMA keys inside):
+    revoke rotates the key, and only the fresh generation re-learns it."""
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    info = nodes[0].auth_seed(handle.handler_id, handle.auth_key, 0)
+    leaked_key = info["desc_key"]
+    fresh = handle.revoke()
+    with pytest.raises(AccessRevoked):
+        net.read_blob("node1", "node0", info["nbytes"], leaked_key)
+    with pytest.raises(AccessRevoked):
+        nodes[0].seed_blob(handle.handler_id, leaked_key)
+    # the fresh-generation handle resumes fine with the rotated key
+    child = fresh.resume_on(nodes[1])
+    assert child.arch == hello_cfg.name
+
+
+def test_resume_descriptor_fetch_works_on_every_backend(hello_cfg,
+                                                        hello_params):
+    for tname in BUILTIN:
+        net = Network()
+        nodes = [NodeRuntime(f"node{i}", net, page_elems=1024)
+                 for i in range(2)]
+        parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+        handle = nodes[0].prepare_fork(parent)
+        child = handle.resume_on(nodes[1], ForkPolicy(
+            lazy=True, descriptor_fetch=tname, page_fetch=tname))
+        got = child.materialize_pytree()
+        import jax
+        for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# per-backend metering
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", BUILTIN)
+def test_per_backend_meter_keys_in_snapshot(tname, hello_cfg, hello_params):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(
+        lazy=True, page_fetch=tname, descriptor_fetch=tname))
+    child.ensure_all()
+    snap = net.snapshot()
+    assert snap[f"{tname}.bytes"] > 0
+    assert snap[f"{tname}.ops"] > 0
+    assert snap["sim_time"] > 0
+    pb = net.per_backend()
+    assert pb[tname]["bytes"] == snap[f"{tname}.bytes"]
+
+
+def test_connection_setup_costs_and_meters():
+    model = NetModel()
+    for tname, setup, n_setups in (("dct", model.dct_setup, 1),
+                                   ("rc", model.rc_setup, 1),
+                                   ("rpc", 0.0, 0),
+                                   ("tpu_ici", 0.0, 0),
+                                   ("shared_fs", 0.0, 0)):
+        net = Network(model=NetModel())
+        node = NodeRuntime("n0", net, page_elems=64)
+        key = net.create_dc_target("n0")
+        frames = node.pool.alloc("float32", 1)
+        t0 = net.sim_time
+        net.read_pages("n1", "n0", "float32", frames, key, transport=tname)
+        first = net.sim_time - t0
+        t1 = net.sim_time
+        net.read_pages("n1", "n0", "float32", frames, key, transport=tname)
+        second = net.sim_time - t1
+        # setup paid exactly once per (src, dst) pair
+        assert first - second == pytest.approx(setup)
+        assert net.meter.get(f"{tname}.setups", 0) == n_setups
+
+
+def test_legacy_category_aggregates_preserved(hello_cfg, hello_params):
+    """Default (dct) forks still report rdma_* / rpc_* aggregates that the
+    benchmarks and examples consume."""
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    handle.resume_on(nodes[1]).ensure_all()
+    snap = net.snapshot()
+    assert snap["rdma_bytes"] > 0 and snap["rdma_ops"] > 0
+    assert snap["rpc_ops"] > 0          # the auth RPC
+    # the backend key carries everything the fabric moved: one-sided reads
+    # (rdma_*) plus the control-plane RPCs that rode the same NIC (rpc_*)
+    assert snap["dct.bytes"] == snap["rdma_bytes"] + snap["rpc_bytes"]
+
+
+def test_cost_model_orders_backends():
+    """Same bytes, very different fabrics: ici < rdma < dfs sim time."""
+    times = {}
+    for tname in ("tpu_ici", "dct", "shared_fs"):
+        net = Network()
+        node = NodeRuntime("n0", net, page_elems=4096)
+        key = net.create_dc_target("n0")
+        frames = node.pool.alloc("float32", 64)
+        net.read_pages("n1", "n0", "float32", frames, key, transport=tname)
+        times[tname] = net.sim_time
+    assert times["tpu_ici"] < times["dct"] < times["shared_fs"]
+
+
+# ---------------------------------------------------------------------------
+# lease telemetry (coordinator + node counters in gc())
+# ---------------------------------------------------------------------------
+
+
+def test_lease_telemetry_in_gc(platform):
+    net, nodes, coord, clock = platform
+    coord.invoke("f")                       # coldstart -> deploys the seed
+    coord.renew_seed("f")
+    coord.renew_seed("f")
+    coord.revoke_seed("f")
+    clock.t = coord.seed_store["f"].lease_deadline + 1
+    freed = coord.gc()
+    tele = freed["lease"]["f"]
+    assert tele["renewals"] == 2
+    assert tele["revocations"] == 1
+    assert tele["expiries"] == 1
+    node_stats = freed["lease_nodes"]
+    assert sum(s.get("renewals", 0) for s in node_stats.values()) == 2
+    assert sum(s.get("revocations", 0) for s in node_stats.values()) == 1
+
+
+def test_node_counts_expiry_at_auth(hello_cfg, hello_params):
+    from repro.fork import LeaseExpired
+    net = Network()
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent, lease=5.0)
+    clock.t = 6.0
+    with pytest.raises(LeaseExpired):
+        handle.resume_on(nodes[1])
+    assert nodes[0].lease_stats["expiries"] == 1
+
+
+# ---------------------------------------------------------------------------
+# byte-based sibling page-cache budget
+# ---------------------------------------------------------------------------
+
+
+def test_page_cache_byte_budget_trips_before_entry_cap():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=1024, cache_enabled=True,
+                       page_cache_cap=1000,
+                       page_cache_cap_bytes=4 * 1024 * 4)   # 4 float32 pages
+    for frame in range(6):
+        node.page_cache_put("owner", "float32", frame, frame + 100)
+    assert len(node._page_cache) == 4                # byte cap, not entry cap
+    assert node.page_cache_bytes() == 4 * 1024 * 4
+    assert node.page_cache_stats["evictions"] == 2
+    assert node.page_cache_get("owner", "float32", 0) is None
+    assert node.page_cache_get("owner", "float32", 5) == 105
+
+
+def test_page_cache_byte_budget_multi_dtype():
+    """A float64 page costs twice a float32 page: the byte budget sees that,
+    the entry cap wouldn't."""
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=1024, cache_enabled=True,
+                       page_cache_cap=1000,
+                       page_cache_cap_bytes=16 * 1024)      # 16 KiB
+    node.page_cache_put("o", "float32", 0, 100)             # 4 KiB
+    node.page_cache_put("o", "float64", 1, 101)             # 8 KiB
+    assert node.page_cache_bytes() == 12 * 1024
+    node.page_cache_put("o", "float64", 2, 102)             # would be 20 KiB
+    assert node.page_cache_bytes() <= 16 * 1024
+    assert node.page_cache_stats["evictions"] == 1
+    assert node.page_cache_get("o", "float32", 0) is None   # LRU victim
+    node.clear_page_cache()
+    assert node.page_cache_bytes() == 0
+
+
+def test_page_cache_invalidated_when_fetching_instance_freed(hello_cfg,
+                                                             hello_params):
+    """Freeing the instance that populated the sibling cache must drop its
+    entries: the pool reuses freed frame indices, so a hit afterwards would
+    serve unrelated data."""
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, cache_enabled=True)
+             for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    c1 = handle.resume_on(nodes[1])
+    c1.ensure_all()
+    assert len(nodes[1]._page_cache) > 0
+    c1.free()                               # frames return to the pool
+    assert len(nodes[1]._page_cache) == 0
+    assert nodes[1].page_cache_bytes() == 0
+    # a sibling forked after the free refetches instead of hitting stale frames
+    c2 = handle.resume_on(nodes[1])
+    c2.ensure_all()
+    assert c2.stats["pages_cached"] == 0 and c2.stats["pages_rdma"] > 0
+    got = c2.materialize_pytree()
+    import jax
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cache_hit_survives_fetcher_free_and_frame_reuse(hello_cfg,
+                                                         hello_params):
+    """A sibling that resumed via cache hits owns copies, not the fetcher's
+    frames: freeing the fetcher and recycling its frames through a new
+    instance must not corrupt the sibling's tensors."""
+    import jax
+    import jax.numpy as jnp
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, cache_enabled=True)
+             for i in range(2)]
+    parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    c1 = handle.resume_on(nodes[1])
+    c1.ensure_all()                         # c1 populates the cache
+    c2 = handle.resume_on(nodes[1])
+    c2.ensure_all()                         # c2 resumes via cache hits
+    assert c2.stats["pages_cached"] > 0
+    c1.free()                               # c1's frames return to the pool
+    # recycle the freed frames with unrelated data
+    junk = ModelInstance.create(nodes[1], "junk",
+                                {"x": jnp.full((2048,), 7.0, jnp.float32)})
+    c2._tensors.clear()                     # force re-read from frames
+    got = c2.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    junk.free()
+
+
+def test_policy_prefetch_applies_to_implicit_fetches(hello_cfg, hello_params):
+    """ForkPolicy.prefetch drives the fault handler even when callers don't
+    pass an explicit prefetch (touch_pages/ensure_tensor defaults)."""
+    counts = {}
+    for pf in (0, 4):
+        net = Network()
+        nodes = [NodeRuntime(f"node{i}", net, page_elems=1024)
+                 for i in range(2)]
+        parent = _mk_parent(nodes[0], hello_cfg, hello_params)
+        handle = nodes[0].prepare_fork(parent)
+        child = handle.resume_on(nodes[1], ForkPolicy(lazy=True, prefetch=pf))
+        name = max(child.leaf_names, key=lambda n: child.aspace[n].npages)
+        for p in range(child.aspace[name].npages):
+            child.touch_pages(name, [p])        # no explicit prefetch arg
+        counts[pf] = child.stats["faults"]
+    assert counts[4] < counts[0]
+
+
+def test_cache_dropped_when_owner_frames_freed(hello_cfg, hello_params):
+    """Owner-side coherence: freeing the seed instance broadcasts an
+    invalidation, so children of a NEW seed whose frames reuse the old
+    indices never hit stale (owner, dtype, frame) cache entries."""
+    import jax
+    import jax.numpy as jnp
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, cache_enabled=True)
+             for i in range(2)]
+    parent_a = _mk_parent(nodes[0], hello_cfg, hello_params)
+    handle_a = nodes[0].prepare_fork(parent_a)
+    c1 = handle_a.resume_on(nodes[1])
+    c1.ensure_all()                         # node1 caches owner=node0 frames
+    assert len(nodes[1]._page_cache) > 0
+    handle_a.reclaim(free_instance=True)    # node0 frames return to its pool
+    assert len(nodes[1]._page_cache) == 0   # broadcast invalidation
+    # a new seed on node0 reuses the freed frame indices with new data
+    new_params = jax.tree.map(lambda a: jnp.asarray(a) + 1.0, hello_params)
+    parent_b = _mk_parent(nodes[0], hello_cfg, new_params)
+    handle_b = nodes[0].prepare_fork(parent_b)
+    c2 = handle_b.resume_on(nodes[1])
+    got = c2.materialize_pytree()
+    assert c2.stats["pages_cached"] == 0    # no stale hits
+    for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_page_cache_rev_index_evicts_shadowed_entry():
+    """Two cache entries must never share a local frame: the later put
+    evicts the shadowed entry so frame invalidation can't miss it."""
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=1024, cache_enabled=True)
+    node.page_cache_put("o1", "float32", 7, 500)
+    node.page_cache_put("o2", "float32", 9, 500)    # same local frame
+    assert node.page_cache_get("o1", "float32", 7) is None   # evicted
+    assert node.page_cache_get("o2", "float32", 9) == 500
+    assert node.page_cache_bytes() == 4 * 1024
+    node.page_cache_invalidate_frames("float32", [500])
+    assert len(node._page_cache) == 0 and node.page_cache_bytes() == 0
+
+
+def test_entry_cap_still_enforced_with_byte_budget():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=1024, cache_enabled=True,
+                       page_cache_cap=3, page_cache_cap_bytes=1 << 30)
+    for frame in range(5):
+        node.page_cache_put("o", "float32", frame, frame)
+    assert len(node._page_cache) == 3                # entry cap trips first
+    assert node.page_cache_stats["evictions"] == 2
