@@ -57,14 +57,27 @@ def deploy_parent(node, fname: str) -> ModelInstance:
     return inst
 
 
-def touch_fraction(inst: ModelInstance, frac: float, prefetch: int = 0):
+def touch_fraction(inst: ModelInstance, frac: float, prefetch: int = 0,
+                   compute_s_per_page: float = 0.0, batch: bool = False):
     """Simulate a function touching `frac` of the parent's memory
-    (the paper's synthetic micro-function)."""
+    (the paper's synthetic micro-function).
+
+    ``compute_s_per_page`` models the function actually *executing* on each
+    touched page (charged via ``Network.advance``) — this is the time async
+    prefetch overlaps transfers with.  ``batch=True`` touches each VMA's
+    working set in ONE fault instead of a per-page loop, exercising the
+    run-coalesced doorbell path."""
+    net = inst.node.network
     for name in inst.leaf_names:
         vma = inst.aspace[name]
         n = max(1, int(round(vma.npages * frac)))
-        for p in range(n):
-            inst.touch_pages(name, [p], prefetch=prefetch)
+        if batch:
+            inst.touch_pages(name, np.arange(n), prefetch=prefetch)
+            net.advance(n * compute_s_per_page)
+        else:
+            for p in range(n):
+                inst.touch_pages(name, [p], prefetch=prefetch)
+                net.advance(compute_s_per_page)
 
 
 @dataclasses.dataclass

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import descriptor as desc_mod
 from repro.core.pagetable import F_DIRTY, F_PRESENT, VMA, AddressSpace
+from repro.core.prefetch import PrefetchEngine
 from repro.memory import paging
 from repro.net import AccessRevoked
 
@@ -34,6 +35,10 @@ class ModelInstance:
         self.ancestry = ancestry            # hop h -> ancestry[h-1]
         self.registers = registers
         self._tensors: Dict[str, jax.Array] = {}
+        # VMA.version at which each cached tensor was assembled: assembly
+        # re-runs only on actual residency/content change, not on every
+        # cache invalidation
+        self._tensor_versions: Dict[str, int] = {}
         self._owned_frames: Dict[str, list] = {}
         self.instance_id = node.new_instance_id()
         # page-fetch transport name (repro.net registry); None = the
@@ -42,6 +47,8 @@ class ModelInstance:
         # ForkPolicy.prefetch: pages pulled per fault when the caller
         # doesn't pass an explicit prefetch
         self.default_prefetch = 0
+        # ForkPolicy.async_prefetch: background lookahead engine (None = off)
+        self.prefetch_engine: Optional[PrefetchEngine] = None
         # True once this instance's frame table traveled in a descriptor
         # (prepare_fork): only then can other nodes hold cache entries
         # keyed on our frames, so only then must free() broadcast
@@ -49,7 +56,9 @@ class ModelInstance:
         # stats keys are historical: "pages_rdma" counts pages served by the
         # (possibly two-sided) page transport, "pages_rpc" the fallback daemon
         self.stats = {"faults": 0, "pages_rdma": 0, "pages_rpc": 0,
-                      "pages_cached": 0, "pages_local": 0, "cow_pages": 0}
+                      "pages_cached": 0, "pages_local": 0, "cow_pages": 0,
+                      "prefetch_issued": 0, "prefetch_used": 0,
+                      "prefetch_wasted": 0}
         node.instances[self.instance_id] = self
 
     # ------------------------------------------------------------------
@@ -70,6 +79,7 @@ class ModelInstance:
                 frames.tolist())
             inst.aspace[name] = VMA.new_local(name, leaf.shape, leaf.dtype, frames)
             inst._tensors[name] = leaf
+            inst._tensor_versions[name] = inst.aspace[name].version
         return inst
 
     # ------------------------------------------------------------------
@@ -80,81 +90,96 @@ class ModelInstance:
                     prefetch: Optional[int] = None) -> None:
         """Materialize the given (missing) pages of a VMA, plus `prefetch`
         adjacent pages per fault — the RDMA-aware page-fault handler.
-        ``prefetch=None`` falls back to the policy's ``default_prefetch``."""
+        ``prefetch=None`` falls back to the policy's ``default_prefetch``.
+
+        The whole fault is vectorized: page selection and the prefetch
+        window are numpy mask ops (``VMA.want_mask``), cache probes are one
+        batched call, and each by-hop group goes to the transport as ONE
+        gather whose contiguous frame runs ride a doorbell-batched op.
+        With an async engine attached, in-flight lookahead is landed first
+        and a fresh window is issued behind the fault."""
         if prefetch is None:
             prefetch = self.default_prefetch
         vma = self.aspace[name]
-        missing = set(vma.missing_pages().tolist())
-        want = [p for p in np.atleast_1d(pages).tolist() if p in missing]
-        if prefetch:
-            extra = []
-            for p in want:
-                extra.extend(q for q in range(p + 1, p + 1 + prefetch)
-                             if q in missing and q not in want)
-            want = sorted(set(want) | set(extra))
-        if not want:
+        pages = np.atleast_1d(np.asarray(pages))
+        engine = self.prefetch_engine
+        if engine is not None:
+            engine.drain(name, pages)   # land lookahead; wait only if needed
+        want_mask = vma.want_mask(pages, prefetch)
+        if engine is not None:
+            want_mask &= ~engine.pending_mask(name)   # in flight: never refetch
+        want = np.nonzero(want_mask)[0]
+        if want.size == 0:
+            if engine is not None:
+                # readahead cursor: keep the window full past the touch
+                # point even when the touch itself was served from flight
+                engine.issue_ahead(name, pages)
             return
         self.stats["faults"] += 1
-        self._tensors.pop(name, None)          # invalidate assembled cache
+        self._fetch_now(vma, want)
+        if engine is not None:
+            engine.issue_ahead(name, want)
 
-        by_hop: Dict[int, list] = {}
-        for p in want:
-            by_hop.setdefault(int(vma.owner_hop[p]), []).append(p)
-
-        for hop, plist in sorted(by_hop.items()):
+    def _hop_groups(self, vma: VMA, want: np.ndarray):
+        """Group ``want`` pages by owner hop and serve sibling-cache hits;
+        yields (owner, dc_key, pages, remote_frames) for what is left to
+        read off-node.  Hop-0 entries (swapped-out locals) are served via
+        the fallback daemon here.  Shared by the synchronous fault path
+        and the async PrefetchEngine so probe/adopt semantics can't drift."""
+        hops = vma.owner_hop[want]
+        for hop in np.unique(hops):
+            plist = want[hops == hop]
             if hop == 0:
                 # local frames that lost PRESENT (swapped out): fallback path
                 self._fallback_fetch(vma, self.node.node_id, plist)
                 continue
-            owner = self.ancestry[hop - 1]
-            key = vma.dc_keys.get(hop, -1)
+            owner = self.ancestry[int(hop) - 1]
+            key = vma.dc_keys.get(int(hop), -1)
             remote_frames = vma.frames[plist]
 
             # sibling page cache (MITOSIS+cache): hits are COPIED into frames
             # this instance owns — sharing the fetcher's frames would leave
             # our page table dangling once the fetcher frees them
-            uncached, cached_local = [], {}
-            for p, rf in zip(plist, remote_frames.tolist()):
-                lf = self.node.page_cache_get(owner, vma.dtype, rf)
-                if lf is not None:
-                    cached_local[p] = lf
-                else:
-                    uncached.append(p)
-            if cached_local:
-                hit_pages = sorted(cached_local)
-                src = np.asarray([cached_local[p] for p in hit_pages], np.int32)
-                data = self.node.pool.read_pages(vma.dtype, src)
-                self._adopt_pages(vma, hit_pages, data)
-                self.stats["pages_cached"] += len(hit_pages)
+            cached = self.node.page_cache_get_many(owner, vma.dtype,
+                                                   remote_frames)
+            hit = cached >= 0
+            if hit.any():
+                data = self.node.pool.read_pages(vma.dtype, cached[hit])
+                self._adopt_pages(vma, plist[hit], data)
+                self.stats["pages_cached"] += int(hit.sum())
 
-            if not uncached:
-                continue
+            plist, remote_frames = plist[~hit], remote_frames[~hit]
+            if plist.size:
+                yield owner, key, plist, remote_frames
+
+    def _fetch_now(self, vma: VMA, want: np.ndarray) -> None:
+        """Synchronously materialize ``want`` (missing) pages, grouped by
+        owner hop, with batched cache probes and run-coalesced reads."""
+        for owner, key, plist, remote_frames in self._hop_groups(vma, want):
             try:
                 data = self.node.network.read_pages(
-                    self.node.node_id, owner, vma.dtype,
-                    vma.frames[uncached], key,
+                    self.node.node_id, owner, vma.dtype, remote_frames, key,
                     transport=self.page_transport)
-                self.stats["pages_rdma"] += len(uncached)
+                self.stats["pages_rdma"] += int(plist.size)
             except AccessRevoked:
                 # VA->PA changed at the owner (swap, reclaim): RPC fallback
-                self._fallback_fetch(vma, owner, uncached)
+                self._fallback_fetch(vma, owner, plist)
                 continue
-            remote_of = vma.frames[uncached].tolist()
-            local = self._adopt_pages(vma, uncached, data)
-            for p, rf, lf in zip(uncached, remote_of, local.tolist()):
-                self.node.page_cache_put(owner, vma.dtype, rf, int(lf))
+            local = self._adopt_pages(vma, plist, data)
+            self.node.page_cache_put_many(owner, vma.dtype, remote_frames,
+                                          local)
 
-    def _fallback_fetch(self, vma: VMA, owner: str, plist: list) -> None:
+    def _fallback_fetch(self, vma: VMA, owner: str, plist) -> None:
         # the fallback daemon is inherently two-sided: always the rpc backend
         net = self.node.network
         frames = vma.frames[plist]
         data = net.rpc(self.node.node_id, owner,
-                       len(plist) * self.node.pool.page_elems
+                       len(frames) * self.node.pool.page_elems
                        * np.dtype(vma.dtype).itemsize,
                        net.nodes[owner].fallback_serve, vma.dtype, frames,
                        transport="rpc")
         self._adopt_pages(vma, plist, data)
-        self.stats["pages_rpc"] += len(plist)
+        self.stats["pages_rpc"] += len(frames)
 
     # ------------------------------------------------------------------
     # tensor-level API
@@ -166,22 +191,43 @@ class ModelInstance:
 
     def ensure_tensor(self, name: str,
                       prefetch: Optional[int] = None) -> jax.Array:
-        if name in self._tensors:
-            return self._tensors[name]
         vma = self.aspace[name]
+        t = self._tensors.get(name)
+        if t is not None and self._tensor_versions.get(name) == vma.version:
+            # the version gate: residency/content unchanged since assembly
+            # (e.g. only disjoint VMAs faulted) — skip the full-pool gather
+            return t
+        if self.prefetch_engine is not None:
+            self.prefetch_engine.drain(name)    # full assembly needs them all
         miss = vma.missing_pages()
         if miss.size:
             self.fetch_pages(name, miss, prefetch)
         pages = self.node.pool.read_pages(vma.dtype, vma.frames)
         t = paging.from_pages(pages, vma.shape, vma.dtype)
         self._tensors[name] = t
+        self._tensor_versions[name] = vma.version
         return t
 
     def ensure_all(self, prefetch: Optional[int] = None) -> None:
-        for name in self.leaf_names:
+        """Materialize every tensor.  With an async engine attached this
+        pipelines: while tensor i assembles, tensor i+1's pages are already
+        in flight on the channel (the §6.2-style overlap of descriptor/page
+        pulls with execution)."""
+        engine = self.prefetch_engine
+        if engine is None:
+            for name in self.leaf_names:
+                self.ensure_tensor(name, prefetch)
+            return
+        names = list(self.leaf_names)
+        if names:
+            engine.issue_window(names[0])
+        for i, name in enumerate(names):
+            if i + 1 < len(names):
+                engine.issue_window(names[i + 1])
             self.ensure_tensor(name, prefetch)
 
     def materialize_pytree(self):
+        self.ensure_all()       # pipelined when an async engine is attached
         leaves = [self.ensure_tensor(n) for n in self.leaf_names]
         return desc_mod.unflatten_from_paths(self.leaf_paths, leaves)
 
@@ -204,7 +250,6 @@ class ModelInstance:
         self._adopt_pages(vma, pages, data)
         vma.mark_dirty(pages)
         self.stats["cow_pages"] += len(pages)
-        self._tensors.pop(name, None)
 
     def add_tensor(self, name: str, arr) -> None:
         """Pre-materialize new state into the instance (workflow globals,
@@ -220,6 +265,7 @@ class ModelInstance:
             self.leaf_names.append(name)
             self.leaf_paths.append([name])
         self._tensors[name] = arr
+        self._tensor_versions[name] = self.aspace[name].version
 
     def write_tensor(self, name: str, arr) -> None:
         arr = jnp.asarray(arr)
@@ -228,6 +274,7 @@ class ModelInstance:
         pages = paging.to_pages(arr, self.node.pool.page_elems)
         self.write_pages(name, np.arange(vma.npages), pages)
         self._tensors[name] = arr
+        self._tensor_versions[name] = vma.version
 
     # ------------------------------------------------------------------
     # accounting / lifecycle
@@ -249,6 +296,9 @@ class ModelInstance:
         return res / max(npages, 1)
 
     def free(self) -> None:
+        if self.prefetch_engine is not None:
+            self.prefetch_engine.discard()
+            self.prefetch_engine = None
         for dt, frames in self._owned_frames.items():
             self.node.page_cache_invalidate_frames(dt, frames)
             if self.frames_published:
@@ -257,5 +307,6 @@ class ModelInstance:
             self.node.pool.free(dt, frames)
         self._owned_frames.clear()
         self._tensors.clear()
+        self._tensor_versions.clear()
         self.aspace = {}
         self.node.instances.pop(self.instance_id, None)

@@ -33,6 +33,9 @@ class VMA:
     flags: np.ndarray            # (npages,) uint8
     dc_keys: Dict[int, int] = dataclasses.field(default_factory=dict)
                                  # hop -> DC key at that ancestor
+    version: int = 0             # bumped on every residency/content change;
+                                 # lets callers cache assembled tensors and
+                                 # reassemble only when pages actually moved
 
     @classmethod
     def new_local(cls, name, shape, dtype, frames):
@@ -75,8 +78,45 @@ class VMA:
     def resident_mask(self) -> np.ndarray:
         return (self.flags & F_PRESENT) != 0
 
+    def missing_mask(self) -> np.ndarray:
+        return (self.flags & F_PRESENT) == 0
+
     def missing_pages(self) -> np.ndarray:
-        return np.nonzero(~self.resident_mask())[0].astype(np.int32)
+        return np.nonzero(self.missing_mask())[0].astype(np.int32)
+
+    def request_mask(self, pages) -> np.ndarray:
+        """Bool mask over this VMA's pages for a requested page list:
+        out-of-range indices are silently dropped.  The one clipping/
+        validation site for the fault path and the prefetch engine."""
+        mask = np.zeros(self.npages, bool)
+        req = np.atleast_1d(np.asarray(pages, np.int64)).ravel()
+        mask[req[(req >= 0) & (req < self.npages)]] = True
+        return mask
+
+    def want_mask(self, pages, prefetch: int = 0) -> np.ndarray:
+        """Bool mask of missing pages a fault on ``pages`` should fetch:
+        the missing requested pages, plus up to ``prefetch`` pages of
+        lookahead window behind each missing requested page.
+
+        Pure numpy mask ops — the prefetch window is an interval union
+        built with a difference array (one cumsum), so cost is
+        O(npages + len(pages)) regardless of the window size, not the
+        quadratic per-page expansion loop this replaces."""
+        miss = self.missing_mask()
+        want = self.request_mask(pages) & miss
+        if prefetch > 0:
+            # windows extend only behind *missing* requested pages — a
+            # resident touch is not a fault and must not trigger pulls
+            faulted = np.nonzero(want)[0]
+            if faulted.size:
+                diff = np.zeros(self.npages + 1, np.int32)
+                starts = np.minimum(faulted + 1, self.npages)
+                ends = np.minimum(faulted + 1 + prefetch, self.npages)
+                np.add.at(diff, starts, 1)
+                np.add.at(diff, ends, -1)
+                window = np.cumsum(diff[:-1]) > 0
+                want |= window & miss
+        return want
 
     def nbytes(self) -> int:
         return int(np.prod(self.shape)) * np.dtype(self.dtype).itemsize
@@ -87,9 +127,11 @@ class VMA:
         self.owner_hop[pages] = 0
         self.frames[pages] = local_frames
         self.flags[pages] |= F_PRESENT
+        self.version += 1
 
     def mark_dirty(self, pages):
         self.flags[pages] |= F_DIRTY
+        self.version += 1
 
     def table_dict(self) -> dict:
         return {

@@ -161,7 +161,13 @@ class ForkHandle:
                              desc.leaf_paths, desc.extra["leaf_names"],
                              ancestry, dict(desc.registers))
         inst.page_transport = policy.page_fetch
+        if policy.async_prefetch:
+            from repro.core.prefetch import PrefetchEngine
+            inst.prefetch_engine = PrefetchEngine(inst, policy.async_prefetch)
         if not policy.lazy:
+            # eager restore pipelines through the engine when one is
+            # attached: the next VMA's pages transfer while this one
+            # assembles
             inst.ensure_all(prefetch=0)
         inst.default_prefetch = policy.prefetch
         return inst

@@ -20,7 +20,12 @@ class ForkPolicy:
     """How a child resumes from a seed.
 
     lazy             : map pages on demand (COW) instead of eager full copy
-    prefetch         : adjacent pages pulled per fault (0 = none)
+    prefetch         : adjacent pages pulled per fault (0 = none) — these
+                       widen the *blocking* read
+    async_prefetch   : lookahead window issued as BACKGROUND fetches by the
+                       child's PrefetchEngine (0 = off); transfers overlap
+                       execution and the clock only waits when a page is
+                       touched before its transfer completes
     descriptor_fetch : transport name for the descriptor transfer (repro.net
                        registry); None = the child network's default backend.
                        One-sided backends read the blob RNIC-style behind its
@@ -34,6 +39,7 @@ class ForkPolicy:
 
     lazy: bool = True
     prefetch: int = 0
+    async_prefetch: int = 0
     descriptor_fetch: Optional[str] = None
     page_fetch: Optional[str] = None
     sibling_cache: Optional[bool] = None
@@ -44,9 +50,10 @@ class ForkPolicy:
     def validate(self) -> "ForkPolicy":
         if not isinstance(self.lazy, bool):
             raise ValueError(f"lazy must be a bool, got {self.lazy!r}")
-        if not isinstance(self.prefetch, int) or isinstance(self.prefetch, bool) \
-                or self.prefetch < 0:
-            raise ValueError(f"prefetch must be an int >= 0, got {self.prefetch!r}")
+        for field in ("prefetch", "async_prefetch"):
+            v = getattr(self, field)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 0:
+                raise ValueError(f"{field} must be an int >= 0, got {v!r}")
         for field in ("descriptor_fetch", "page_fetch"):
             name = getattr(self, field)
             if name is None:

@@ -8,7 +8,8 @@ children read over RDMA.
 """
 from __future__ import annotations
 
-from typing import Dict, List
+import bisect
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +31,7 @@ class PagePool:
         self.page_elems = page_elems
         self.grow_frames = grow_frames
         self._frames: Dict[str, np.ndarray] = {}    # dtype name -> (F, page_elems)
-        self._free: Dict[str, List[int]] = {}
+        self._free: Dict[str, List[int]] = {}       # kept sorted ascending
         self._allocated: Dict[str, set] = {}
 
     # -- bookkeeping ---------------------------------------------------------
@@ -57,20 +58,82 @@ class PagePool:
             self._free[dt].extend(range(old.shape[0], old.shape[0] + grow))
 
     # -- alloc/free ----------------------------------------------------------
+    # The allocator is extent-aware: the free list is kept sorted so free
+    # frames form coalesced runs, and alloc() hands out the best-fit
+    # contiguous run (falling back to the largest runs when fragmented).
+    # Contiguity is what makes a VMA's pages one scatter-gather entry on
+    # the wire — the transport charges per contiguous run, so a seed
+    # packed into extents is read with a handful of doorbell ops instead
+    # of one op per page.
+
+    def _free_runs(self, dt: str) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(free_frames, run_starts, run_lens) over the sorted free list."""
+        arr = np.asarray(self._free[dt], np.int32)
+        if arr.size == 0:
+            return arr, np.zeros(0, np.int64), np.zeros(0, np.int64)
+        breaks = np.nonzero(np.diff(arr) != 1)[0] + 1
+        starts = np.concatenate([[0], breaks]).astype(np.int64)
+        ends = np.concatenate([breaks, [arr.size]]).astype(np.int64)
+        return arr, starts, ends - starts
+
+    def free_extents(self, dtype) -> List[Tuple[int, int]]:
+        """[(first_frame, run_len)] of the coalesced free runs (diagnostics)."""
+        dt = self._dt(dtype)
+        if dt not in self._free:
+            return []
+        arr, starts, lens = self._free_runs(dt)
+        return [(int(arr[s]), int(l)) for s, l in zip(starts, lens)]
 
     def alloc(self, dtype, n: int) -> np.ndarray:
         dt = self._dt(dtype)
+        if n <= 0:
+            return np.zeros(0, np.int32)
         self._ensure_capacity(dt, n)
-        frames = [self._free[dt].pop() for _ in range(n)]
-        self._allocated[dt].update(frames)
-        return np.asarray(frames, np.int32)
+        if n == 1:
+            # fault/COW hot path: pop the highest free frame — O(1), and
+            # taking a run's tail frame never splits an extent
+            f = self._free[dt].pop()
+            self._allocated[dt].add(f)
+            return np.asarray([f], np.int32)
+        arr, starts, lens = self._free_runs(dt)
+        fits = np.nonzero(lens >= n)[0]
+        if fits.size:
+            # best fit: the smallest run that holds the request whole, so
+            # large extents survive for large allocations.  arr indexes the
+            # sorted free list positionally, so the hot path removes one
+            # slice instead of rebuilding the list.
+            i = int(fits[np.argmin(lens[fits])])
+            s = int(starts[i])
+            take = arr[s:s + n].copy()
+            del self._free[dt][s:s + n]
+        else:
+            # fragmented: span the largest runs first to minimize the
+            # number of extents the allocation straddles
+            parts, need = [], n
+            for i in np.argsort(-lens):
+                s, l = int(starts[i]), int(min(lens[i], need))
+                parts.append(arr[s:s + l])
+                need -= l
+                if need == 0:
+                    break
+            take = np.concatenate(parts)
+            taken = set(take.tolist())
+            self._free[dt] = [f for f in self._free[dt] if f not in taken]
+        self._allocated[dt].update(take.tolist())
+        return np.asarray(take, np.int32)
 
     def free(self, dtype, frames) -> None:
         dt = self._dt(dtype)
-        for f in np.asarray(frames).tolist():
-            if f in self._allocated[dt]:
-                self._allocated[dt].discard(f)
-                self._free[dt].append(f)
+        alloc = self._allocated[dt]
+        returned = sorted({f for f in np.asarray(frames).tolist()
+                           if f in alloc})
+        if not returned:
+            return
+        alloc.difference_update(returned)
+        if len(returned) == 1:       # common single-frame case: no re-sort
+            bisect.insort(self._free[dt], returned[0])
+        else:                        # one merge of two sorted lists
+            self._free[dt] = sorted(self._free[dt] + returned)
 
     def num_allocated(self, dtype=None) -> int:
         if dtype is not None:

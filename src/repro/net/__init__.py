@@ -9,8 +9,9 @@ meter aggregation).  Built-in backends: ``dct``, ``rc``, ``rpc``,
 from repro.net.errors import AccessRevoked, LeaseExpired
 from repro.net.model import NetModel
 from repro.net.network import Network
-from repro.net.transport import (Transport, register_transport,
-                                 resolve_transport, transport_names)
+from repro.net.transport import (Transport, contiguous_runs,
+                                 register_transport, resolve_transport,
+                                 transport_names)
 from repro.net.backends import (DctTransport, RcTransport, RpcTransport,
                                 SharedFsTransport, TpuIciTransport)
 
@@ -20,6 +21,7 @@ __all__ = [
     "NetModel",
     "Network",
     "Transport",
+    "contiguous_runs",
     "register_transport",
     "resolve_transport",
     "transport_names",

@@ -32,6 +32,7 @@ class DctTransport(Transport):
     one_sided = True
     connection_oriented = True
     legacy_meter = "rdma"
+    max_sge = 16                   # SGEs per doorbell-batched work request
 
     def setup_cost(self) -> float:
         return self.model.dct_setup
@@ -51,6 +52,7 @@ class RcTransport(Transport):
     one_sided = True
     connection_oriented = True
     legacy_meter = "rdma"
+    max_sge = 16
 
     def setup_cost(self) -> float:
         return self.model.rc_setup
@@ -71,6 +73,7 @@ class RpcTransport(Transport):
     name = "rpc"
     one_sided = False
     legacy_meter = "rpc"
+    max_sge = 8                    # the daemon batches extents per request
 
     def op_latency(self) -> float:
         return self.model.rpc_lat
@@ -87,6 +90,7 @@ class TpuIciTransport(Transport):
     name = "tpu_ici"
     one_sided = True
     legacy_meter = "ici"
+    max_sge = 32                   # DMA descriptor ring, deep batching
 
     def op_latency(self) -> float:
         return self.model.ici_lat
@@ -103,6 +107,7 @@ class SharedFsTransport(Transport):
     name = "shared_fs"
     one_sided = False
     legacy_meter = "dfs"
+    max_sge = 1                    # every extent is a separate DFS request
 
     def op_latency(self) -> float:
         return self.model.dfs_lat

@@ -35,6 +35,10 @@ class Network:
         self.sim_time = 0.0
         self._transports: Dict[str, Transport] = {}
         self._connections = set()           # (transport, src, dst) live pairs
+        # per-(src, dst) channel busy-until timestamps: overlapped (async)
+        # transfers serialize against each other on their channel, not
+        # against the sim clock
+        self._channel_busy: Dict[tuple, float] = {}
         # DC targets: (node_id, dc_key) -> True while valid
         self._dc_targets: Dict[tuple, bool] = {}
         self._next_key = 1
@@ -96,6 +100,30 @@ class Network:
         if not self.target_valid(node_id, key):
             raise AccessRevoked(f"DC target {key}@{node_id} destroyed")
 
+    # -- channel busy-time accounting (transfer/execution overlap) ---------------
+
+    def channel_busy(self, src: str, dst: str) -> float:
+        """Absolute sim time until which the (src, dst) channel is occupied.
+        Right after an async read this is that transfer's completion time."""
+        return self._channel_busy.get((src, dst), 0.0)
+
+    def set_channel_busy(self, src: str, dst: str, until: float) -> None:
+        self._channel_busy[(src, dst)] = until
+
+    def advance(self, seconds: float) -> None:
+        """Model ``seconds`` of child-side *execution* on the critical path.
+        Channel busy-until stamps are absolute, so in-flight async transfers
+        keep draining while the clock moves — this is where overlap pays."""
+        if seconds > 0:
+            self.sim_time += seconds
+
+    def wait_until(self, t: float) -> None:
+        """Block the sim clock until ``t`` (awaiting an async completion);
+        time already covered by execution costs nothing extra."""
+        if t > self.sim_time:
+            self.meter["async_wait_s"] += t - self.sim_time
+            self.sim_time = t
+
     # -- connections ------------------------------------------------------------
 
     def note_connection(self, transport: str, src: str, dst: str) -> bool:
@@ -110,10 +138,12 @@ class Network:
     # -- data plane ---------------------------------------------------------------
 
     def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int,
-                   transport: Optional[str] = None):
-        """Read of `frames` from dst's pool over the named backend."""
-        return self.transport_obj(transport).read_pages(src, dst, dtype,
-                                                        frames, dc_key)
+                   transport: Optional[str] = None, async_read: bool = False):
+        """Read of `frames` from dst's pool over the named backend.
+        ``async_read=True`` issues the read without blocking the sim clock
+        (it occupies the channel; completion = ``channel_busy(src, dst)``)."""
+        return self.transport_obj(transport).read_pages(
+            src, dst, dtype, frames, dc_key, async_read=async_read)
 
     def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int,
                   transport: Optional[str] = None) -> None:
@@ -133,14 +163,17 @@ class Network:
         return dict(self.meter) | {"sim_time": self.sim_time}
 
     def per_backend(self) -> Dict[str, dict]:
-        """{backend: {bytes, ops, setups, setup_s}} for every registered
-        backend (zeros for backends this network never used)."""
+        """{backend: {bytes, ops, sges, async_ops, setups, setup_s}} for
+        every registered backend (zeros for backends this network never
+        used)."""
         out: Dict[str, dict] = {}
         for name in transport_names():
             out[name] = {k: self.meter.get(f"{name}.{k}", 0)
-                         for k in ("bytes", "ops", "setups", "setup_s")}
+                         for k in ("bytes", "ops", "sges", "async_ops",
+                                   "setups", "setup_s")}
         return out
 
     def reset_meter(self) -> None:
         self.meter.clear()
         self.sim_time = 0.0
+        self._channel_busy.clear()   # busy stamps are absolute on the clock

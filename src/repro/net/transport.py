@@ -21,9 +21,16 @@ seed is unreadable over *any* fabric, not just RDMA.
 
 Metering is aggregated at the :class:`~repro.net.network.Network` but tagged
 per backend: each op charges ``{name}.bytes`` / ``{name}.ops`` (plus
-``{name}.setups`` / ``{name}.setup_s`` for connection-oriented backends)
-alongside the legacy category aggregates (``rdma_*``, ``rpc_*``, ``ici_*``,
-``dfs_*``) that benchmarks and examples report.
+``{name}.setups`` / ``{name}.setup_s`` for connection-oriented backends, and
+``{name}.sges`` / ``{name}.async_ops`` on the paging path) alongside the
+legacy category aggregates (``rdma_*``, ``rpc_*``, ``ici_*``, ``dfs_*``)
+that benchmarks and examples report.
+
+Page reads are *doorbell-batched*: the frame list is split into maximal
+contiguous runs (one scatter-gather entry each), and one posted op carries
+up to ``max_sge`` runs — so fragmentation and tiny faults show up in
+``sim_time`` while extent-packed VMAs move in a handful of ops (see
+``docs/paging.md``).
 
 Registering a custom backend::
 
@@ -43,10 +50,23 @@ it by name; unknown names raise ``ValueError`` listing what is registered.
 from __future__ import annotations
 
 import abc
+import math
 from typing import ClassVar, Dict, List, Optional, Type
+
+import numpy as np
 
 
 _REGISTRY: Dict[str, Type["Transport"]] = {}
+
+
+def contiguous_runs(frames) -> int:
+    """Number of maximal contiguous ascending runs in ``frames`` — the
+    scatter-gather entry (SGE) count a doorbell-batched read needs.  A
+    fully contiguous gather is 1 run; a fully scattered one is len(frames)."""
+    idx = np.asarray(frames, np.int64).ravel()
+    if idx.size == 0:
+        return 0
+    return 1 + int(np.count_nonzero(np.diff(idx) != 1))
 
 
 def register_transport(cls: Type["Transport"]) -> Type["Transport"]:
@@ -63,6 +83,11 @@ def register_transport(cls: Type["Transport"]) -> Type["Transport"]:
         raise ValueError(
             f"transport {name!r} must define the `legacy_meter` str ClassVar "
             "(aggregate category, e.g. 'rdma' or 'rpc')")
+    max_sge = getattr(cls, "max_sge", None)
+    if not isinstance(max_sge, int) or isinstance(max_sge, bool) or max_sge < 1:
+        raise ValueError(
+            f"transport {name!r} must define `max_sge` as an int >= 1 "
+            f"(scatter-gather entries per doorbell op), got {max_sge!r}")
     _REGISTRY[name] = cls
     return cls
 
@@ -93,6 +118,7 @@ class Transport(abc.ABC):
     one_sided: ClassVar[bool]                  # reads bypass the owner's CPU
     connection_oriented: ClassVar[bool] = False  # pays setup per (src, dst)
     legacy_meter: ClassVar[str]                # aggregate category: rdma|rpc|ici|dfs
+    max_sge: ClassVar[int] = 16                # SGEs per doorbell-batched op
 
     def __init__(self, net):
         self.net = net
@@ -118,16 +144,29 @@ class Transport(abc.ABC):
 
     # -- data plane ---------------------------------------------------------
 
-    def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int):
+    def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int,
+                   async_read: bool = False):
         """Read ``frames`` out of dst's pool.  Admitted iff (dst, dc_key) is
-        a live DC target — revoking the target kills access on EVERY backend."""
+        a live DC target — revoking the target kills access on EVERY backend.
+
+        The gather is doorbell-batched: each maximal contiguous frame run is
+        one scatter-gather entry, and one posted op carries up to ``max_sge``
+        of them — so a contiguous 64-page fault is ONE op while 64 scattered
+        pages cost ``ceil(64/max_sge)`` ops plus 64 SGEs.  ``async_read=True``
+        occupies the (src, dst) channel without blocking the sim clock; the
+        caller learns the completion time from ``net.channel_busy(src, dst)``
+        and waits only when it actually needs the pages (overlap, rFaaS-style).
+        """
         node = self.net.require_node(dst)
         self.net.check_target(dst, dc_key)
         self._setup(src, dst)
         pages = node.pool.read_pages(dtype, frames)
         nbytes = pages.size * pages.dtype.itemsize
-        self._charge("read", nbytes,
-                     self.op_latency() + nbytes / self.bandwidth())
+        sges = contiguous_runs(frames)
+        ops = max(1, math.ceil(sges / self.max_sge))
+        self._charge("read", src, dst, nbytes,
+                     ops * self.op_latency() + nbytes / self.bandwidth(),
+                     ops=ops, sges=sges, async_read=async_read)
         return pages
 
     def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int) -> None:
@@ -136,13 +175,13 @@ class Transport(abc.ABC):
         self.net.require_node(dst)
         self.net.check_target(dst, dc_key)
         self._setup(src, dst)
-        self._charge("read", nbytes,
+        self._charge("read", src, dst, nbytes,
                      self.op_latency() + nbytes / self.bandwidth())
 
     def rpc(self, src: str, dst: str, nbytes: int, fn, *args, **kwargs):
         """Two-sided call executed by the destination node (FaSST-style)."""
         self.net.require_node(dst)
-        self._charge("rpc", nbytes,
+        self._charge("rpc", src, dst, nbytes,
                      self.rpc_latency() + nbytes / self.bandwidth())
         return fn(*args, **kwargs)
 
@@ -160,11 +199,29 @@ class Transport(abc.ABC):
         meter[f"{self.name}.setup_s"] += cost
         self.net.sim_time += cost
 
-    def _charge(self, kind: str, nbytes: int, seconds: float) -> None:
+    def _charge(self, kind: str, src: str, dst: str, nbytes: int,
+                seconds: float, ops: int = 1, sges: Optional[int] = None,
+                async_read: bool = False) -> float:
+        """Meter one transfer and account its time on the (src, dst) channel.
+
+        The transfer starts when both the caller (sim clock) and the channel
+        are free, and holds the channel until it completes.  A synchronous
+        charge blocks the sim clock to that completion; an async charge
+        leaves the clock alone — overlapped transfers serialize on their
+        channel, not on the simulation.  Returns the completion time."""
         meter = self.net.meter
         meter[f"{self.name}.bytes"] += nbytes
-        meter[f"{self.name}.ops"] += 1
+        meter[f"{self.name}.ops"] += ops
+        if sges is not None:        # page reads only — blob/rpc have no SGEs
+            meter[f"{self.name}.sges"] += sges
         category = "rpc" if kind == "rpc" else self.legacy_meter
         meter[f"{category}_bytes"] += nbytes
-        meter[f"{category}_ops"] += 1
-        self.net.sim_time += seconds
+        meter[f"{category}_ops"] += ops
+        start = max(self.net.sim_time, self.net.channel_busy(src, dst))
+        end = start + seconds
+        self.net.set_channel_busy(src, dst, end)
+        if async_read:
+            meter[f"{self.name}.async_ops"] += ops
+        else:
+            self.net.sim_time = end
+        return end

@@ -179,16 +179,19 @@ class NodeRuntime:
     # -- fallback daemon (§5.4) -------------------------------------------------
 
     def fallback_serve(self, dtype, frames):
-        """RPC handler: load pages on behalf of a child (swapped or live)."""
+        """RPC handler: load pages on behalf of a child (swapped or live).
+        One pool gather serves every live frame; swapped-out frames are
+        overlaid from "disk" — no per-frame read/stack loop."""
         dt = jnp.dtype(dtype).name
-        pages = []
-        for f in np.asarray(frames).tolist():
-            key = (dt, int(f))
-            if key in self._swapped:
-                pages.append(jnp.asarray(self._swapped[key]))
-            else:
-                pages.append(self.pool.read_pages(dtype, np.asarray([f], np.int32))[0])
-        return jnp.stack(pages)
+        idx = np.asarray(frames, np.int32).ravel()
+        live = np.asarray([(dt, int(f)) not in self._swapped
+                           for f in idx.tolist()], bool)
+        out = np.zeros((idx.size, self.pool.page_elems), dtype=jnp.dtype(dt))
+        if live.any():
+            out[live] = np.asarray(self.pool.read_pages(dtype, idx[live]))
+        for i in np.nonzero(~live)[0]:
+            out[i] = self._swapped[(dt, int(idx[i]))]
+        return jnp.asarray(out)
 
     # -- swap-out: the VA->PA change corner case ---------------------------------
 
@@ -228,6 +231,37 @@ class NodeRuntime:
         self._page_cache.move_to_end(key)
         self.page_cache_stats["hits"] += 1
         return local
+
+    def page_cache_get_many(self, owner: str, dtype: str,
+                            frames) -> np.ndarray:
+        """Batched probe: int32 array of local frames, -1 per miss.  One
+        call per fault instead of one per page — the dict walk stays, the
+        per-page Python call/stat churn goes."""
+        idx = np.asarray(frames, np.int64).ravel()
+        out = np.full(idx.size, -1, np.int32)
+        if not self.cache_enabled:
+            return out
+        dt = jnp.dtype(dtype).name
+        cache = self._page_cache
+        for i, f in enumerate(idx.tolist()):
+            key = (owner, dt, int(f))
+            local = cache.get(key)
+            if local is not None:
+                cache.move_to_end(key)
+                out[i] = local
+        hits = int((out >= 0).sum())
+        self.page_cache_stats["hits"] += hits
+        self.page_cache_stats["misses"] += idx.size - hits
+        return out
+
+    def page_cache_put_many(self, owner: str, dtype: str, frames,
+                            locals_) -> None:
+        """Batched insert: one call per fault; eviction policy unchanged."""
+        if not self.cache_enabled:
+            return
+        for f, lf in zip(np.asarray(frames).tolist(),
+                         np.asarray(locals_).tolist()):
+            self.page_cache_put(owner, dtype, int(f), int(lf))
 
     def page_cache_put(self, owner: str, dtype: str, frame: int, local: int) -> None:
         if not self.cache_enabled:

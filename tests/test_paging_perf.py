@@ -1,0 +1,549 @@
+"""The doorbell-batched, pipelined demand-paging path (PR 3): vectorized
+fault handling vs a per-page reference, extent allocation, max_sge op
+accounting, channel-overlap sim accounting, and the async PrefetchEngine."""
+import math
+import zlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.instance import ModelInstance
+from repro.core.pagetable import VMA
+from repro.fork import ForkPolicy
+from repro.memory.pool import PagePool
+from repro.net import Network, contiguous_runs, resolve_transport
+from repro.platform.node import NodeRuntime
+
+TRANSPORTS = ("dct", "rc", "rpc", "tpu_ici", "shared_fs")
+PAGE_ELEMS = 256
+
+
+def _cluster(cache=False, n=2):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=PAGE_ELEMS,
+                         cache_enabled=cache) for i in range(n)]
+    return net, nodes
+
+
+def _params(rng_seed=0, npages=23):
+    rng = np.random.default_rng(rng_seed)
+    return {
+        "w": jnp.asarray(rng.standard_normal(npages * PAGE_ELEMS - 37),
+                         jnp.float32),
+        "b": jnp.asarray(rng.standard_normal(3 * PAGE_ELEMS + 11),
+                         jnp.float32),
+    }
+
+
+def _reference_child(params):
+    """Per-page, prefetch-0, no-cache fetch — the scalar reference path."""
+    net, nodes = _cluster(cache=False)
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+    for name in child.leaf_names:
+        for p in range(child.aspace[name].npages):
+            child.touch_pages(name, [p])
+    return child.materialize_pytree()
+
+
+# ---------------------------------------------------------------------------
+# property: batched/coalesced handler == per-page reference, everywhere
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("tname", TRANSPORTS)
+@pytest.mark.parametrize("cache", (False, True), ids=("nocache", "cache"))
+@pytest.mark.parametrize("mode", ("pf0", "pf4", "async"))
+def test_batched_fault_handler_matches_per_page_reference(tname, cache, mode):
+    """Across every transport × cache setting × prefetch mode, the batched
+    handler (random-subset batched touches, then full materialize) must
+    produce byte-identical tensors to the scalar per-page reference."""
+    params = _params()
+    ref = _reference_child(params)
+    policy = ForkPolicy(
+        page_fetch=tname, descriptor_fetch=tname,
+        prefetch=4 if mode == "pf4" else 0,
+        async_prefetch=4 if mode == "async" else 0)
+    net, nodes = _cluster(cache=cache)
+    parent = ModelInstance.create(nodes[0], "t", params)
+    handle = nodes[0].prepare_fork(parent)
+    # crc32, not hash(): stable across processes so any failure reproduces
+    rng = np.random.default_rng(zlib.crc32(f"{tname}/{cache}/{mode}".encode()))
+    for trial in range(2):       # second child exercises the sibling cache
+        child = handle.resume_on(nodes[1], policy)
+        for name in child.leaf_names:
+            npages = child.aspace[name].npages
+            pages = rng.choice(npages, size=max(1, npages // 2),
+                               replace=False)
+            child.touch_pages(name, pages)
+        got = child.materialize_pytree()
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(got[k]), np.asarray(ref[k]),
+                err_msg=f"{tname}/cache={cache}/{mode}/{k}")
+    if cache:
+        assert nodes[1].page_cache_stats["hits"] > 0
+
+
+def test_want_mask_matches_scalar_reference():
+    """VMA.want_mask (mask-op prefetch expansion) reproduces the old
+    per-page set-loop semantics on randomized residency patterns."""
+    rng = np.random.default_rng(7)
+    for _ in range(50):
+        n = int(rng.integers(1, 64))
+        v = VMA.new_local("w", (n * 4,), "float32",
+                          np.arange(n, dtype=np.int32)).child_view(1)
+        resident = rng.random(n) < 0.4
+        if resident.any():
+            v.mark_resident(np.nonzero(resident)[0],
+                            np.nonzero(resident)[0] + 100)
+        req = rng.choice(n, size=int(rng.integers(1, n + 1)), replace=False)
+        prefetch = int(rng.integers(0, 9))
+        # scalar reference: the pre-PR-3 loop
+        missing = set(v.missing_pages().tolist())
+        want = [p for p in req.tolist() if p in missing]
+        extra = []
+        for p in want:
+            extra.extend(q for q in range(p + 1, p + 1 + prefetch)
+                         if q in missing and q not in want)
+        expect = sorted(set(want) | set(extra))
+        got = np.nonzero(v.want_mask(req, prefetch))[0].tolist()
+        assert got == expect, (n, req.tolist(), prefetch, resident.tolist())
+
+
+# ---------------------------------------------------------------------------
+# extent-aware allocation
+# ---------------------------------------------------------------------------
+
+
+def test_alloc_zero_is_a_noop():
+    pool = PagePool(page_elems=64)
+    assert pool.alloc("float32", 0).size == 0
+    assert pool.num_allocated("float32") == 0
+
+
+def test_alloc_returns_contiguous_extent():
+    pool = PagePool(page_elems=64, grow_frames=256)
+    a = pool.alloc("float32", 64)
+    assert (np.diff(a) == 1).all()
+    b = pool.alloc("float32", 32)
+    assert (np.diff(b) == 1).all()
+    assert set(a.tolist()).isdisjoint(b.tolist())
+
+
+def test_alloc_best_fit_prefers_smallest_hole():
+    pool = PagePool(page_elems=64, grow_frames=64)
+    base = pool.alloc("float32", 64)              # frames 0..63
+    pool.free("float32", base[10:14])             # 4-frame hole
+    pool.free("float32", base[30:50])             # 20-frame hole
+    got = pool.alloc("float32", 4)
+    assert got.tolist() == base[10:14].tolist()   # best fit, not first fit
+    assert (10, 4) not in pool.free_extents("float32")
+
+
+def test_alloc_spans_runs_when_fragmented():
+    pool = PagePool(page_elems=64, grow_frames=16)
+    a = pool.alloc("float32", 16)
+    # free every other pair: no run longer than 2 remains
+    for s in range(0, 16, 4):
+        pool.free("float32", a[s:s + 2])
+    got = pool.alloc("float32", 6)
+    assert len(set(got.tolist())) == 6
+    assert contiguous_runs(got) == 3              # spans the largest runs
+
+
+def test_free_coalesces_extents():
+    pool = PagePool(page_elems=64, grow_frames=32)
+    a = pool.alloc("float32", 32)
+    pool.free("float32", a[8:16])
+    pool.free("float32", a[16:24])
+    assert (8, 16) in pool.free_extents("float32")
+
+
+# ---------------------------------------------------------------------------
+# doorbell / max_sge op accounting
+# ---------------------------------------------------------------------------
+
+
+def test_contiguous_fault_is_one_doorbell_op():
+    """Acceptance: a contiguous 64-page fault records <= ceil(64/max_sge)
+    ops (it is in fact ONE op = one SGE covering the whole extent)."""
+    net, nodes = _cluster()
+    params = {"w": jnp.zeros(64 * PAGE_ELEMS, jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+    net.reset_meter()
+    child.fetch_pages("w", np.arange(64))
+    max_sge = resolve_transport("dct").max_sge
+    assert net.meter["dct.ops"] <= math.ceil(64 / max_sge)
+    assert net.meter["dct.ops"] == 1 and net.meter["dct.sges"] == 1
+
+
+def test_scattered_read_pays_per_run_and_caps_at_max_sge():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=64)
+    key = net.create_dc_target("n0")
+    frames = node.pool.alloc("float32", 128)
+    max_sge = resolve_transport("dct").max_sge
+    net.reset_meter()
+    net.read_pages("n1", "n0", "float32", frames, key)          # 1 run
+    contiguous = {"ops": net.meter["dct.ops"], "t": net.sim_time}
+    assert contiguous["ops"] == 1 and net.meter["dct.sges"] == 1
+    net.reset_meter()
+    net._connections.clear()
+    scattered = frames[::2]                                      # 64 runs
+    net.read_pages("n1", "n0", "float32", scattered, key)
+    assert net.meter["dct.sges"] == 64
+    assert net.meter["dct.ops"] == math.ceil(64 / max_sge)
+    # fragmentation is visible in sim time: more doorbells, same per-byte
+    per_byte = 64 * 64 * 4 / net.model.rdma_bw
+    assert net.sim_time - net.model.dct_setup == pytest.approx(
+        math.ceil(64 / max_sge) * net.model.rdma_lat + per_byte)
+
+
+def test_every_backend_meters_sges():
+    for tname in TRANSPORTS:
+        net = Network()
+        node = NodeRuntime("n0", net, page_elems=64)
+        key = net.create_dc_target("n0")
+        frames = node.pool.alloc("float32", 8)
+        net.read_pages("n1", "n0", "float32", frames[::2], key,
+                       transport=tname)
+        cls = resolve_transport(tname)
+        assert net.meter[f"{tname}.sges"] == 4
+        assert net.meter[f"{tname}.ops"] == math.ceil(4 / cls.max_sge)
+
+
+def test_malformed_max_sge_rejected_at_registration():
+    from repro.net import Transport, register_transport
+
+    class BadSge(Transport):
+        name = "_test_badsge"
+        one_sided = True
+        legacy_meter = "rdma"
+        max_sge = 0
+
+        def op_latency(self):
+            return 0.0
+
+        def bandwidth(self):
+            return 1.0
+
+    with pytest.raises(ValueError, match="max_sge"):
+        register_transport(BadSge)
+
+
+# ---------------------------------------------------------------------------
+# channel-overlap sim accounting
+# ---------------------------------------------------------------------------
+
+
+def test_async_read_occupies_channel_not_clock():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=64)
+    key = net.create_dc_target("n0")
+    frames = node.pool.alloc("float32", 16)
+    t0 = net.sim_time
+    net.read_pages("n1", "n0", "float32", frames, key, async_read=True)
+    # only the (blocking) connection setup hit the clock — not the transfer
+    assert net.sim_time == t0 + net.model.dct_setup
+    done = net.channel_busy("n1", "n0")
+    assert done > net.sim_time
+    assert net.meter["dct.async_ops"] == 1
+    # execution overlaps the transfer; waiting afterwards costs nothing
+    net.advance(done - t0 + 1e-6)
+    before = net.sim_time
+    net.wait_until(done)
+    assert net.sim_time == before
+
+
+def test_async_transfers_serialize_on_their_channel():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=64)
+    key = net.create_dc_target("n0")
+    f1 = node.pool.alloc("float32", 16)
+    f2 = node.pool.alloc("float32", 16)
+    net.read_pages("n1", "n0", "float32", f1, key, async_read=True)
+    one = net.channel_busy("n1", "n0")
+    net.read_pages("n1", "n0", "float32", f2, key, async_read=True)
+    two = net.channel_busy("n1", "n0")
+    assert two > one                               # queued behind the first
+    # a different channel is free
+    assert net.channel_busy("n2", "n0") == 0.0
+
+
+def test_sync_read_queues_behind_async_in_flight():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=64)
+    key = net.create_dc_target("n0")
+    f1 = node.pool.alloc("float32", 64)
+    f2 = node.pool.alloc("float32", 1)
+    net.read_pages("n1", "n0", "float32", f1, key, async_read=True)
+    busy = net.channel_busy("n1", "n0")
+    net.read_pages("n1", "n0", "float32", f2, key)
+    assert net.sim_time > busy                     # waited for the channel
+
+
+def test_reset_meter_clears_channels():
+    net = Network()
+    node = NodeRuntime("n0", net, page_elems=64)
+    key = net.create_dc_target("n0")
+    net.read_pages("n1", "n0", "float32", node.pool.alloc("float32", 4), key,
+                   async_read=True)
+    assert net.channel_busy("n1", "n0") > 0
+    net.reset_meter()
+    assert net.channel_busy("n1", "n0") == 0.0 and net.sim_time == 0.0
+
+
+# ---------------------------------------------------------------------------
+# the async PrefetchEngine
+# ---------------------------------------------------------------------------
+
+
+def _sweep_sim_time(policy, compute=2e-6, npages=128):
+    net, nodes = _cluster()
+    params = {"w": jnp.arange(npages * PAGE_ELEMS, dtype=jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1], policy)
+    net.reset_meter()
+    for p in range(npages):
+        child.touch_pages("w", [p])
+        net.advance(compute)
+    if child.prefetch_engine is not None:
+        child.prefetch_engine.drain_all()
+    return net.sim_time, int(net.meter["dct.bytes"]), child
+
+
+def test_async_prefetch_strictly_beats_sync_at_equal_bytes():
+    sync_t, sync_b, _ = _sweep_sim_time(ForkPolicy(prefetch=8))
+    async_t, async_b, child = _sweep_sim_time(ForkPolicy(async_prefetch=8))
+    assert async_b == sync_b                       # identical bytes moved
+    assert async_t < sync_t                        # overlap pays
+    assert child.stats["prefetch_used"] > 0
+    assert child.stats["faults"] < 128 // 8        # window kept ahead
+
+
+def test_async_child_tensors_identical():
+    params = _params(rng_seed=3)
+    ref = _reference_child(params)
+    net, nodes = _cluster()
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(async_prefetch=6))
+    got = child.materialize_pytree()
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(ref[k]))
+    assert child.stats["prefetch_used"] > 0
+
+
+def test_eager_resume_pipelines_through_engine():
+    params = _params(rng_seed=4)
+    net, nodes = _cluster()
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(lazy=False, async_prefetch=8))
+    assert child.resident_fraction() == 1.0
+    assert child.stats["prefetch_issued"] > 0
+    got = child.materialize_pytree()
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(parent.ensure_tensor(k)))
+
+
+def test_cow_write_wins_over_inflight_prefetch():
+    """A page COW-written while its prefetch is in flight keeps the local
+    write; the stale prefetched payload is dropped as wasted."""
+    net, nodes = _cluster()
+    params = {"w": jnp.zeros(16 * PAGE_ELEMS, jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(async_prefetch=8))
+    child.touch_pages("w", [0])                   # issues lookahead 1..8
+    assert child.prefetch_engine.pending_count() > 0
+    ones = np.ones((1, PAGE_ELEMS), np.float32)
+    child.write_pages("w", [3], ones)             # COW while in flight
+    # touching the COW-won page must NOT block on its stale transfer
+    t0 = net.sim_time
+    child.touch_pages("w", [3])
+    assert net.meter["async_wait_s"] == 0 and net.sim_time == t0
+    child.prefetch_engine.drain_all()
+    got = np.asarray(child.ensure_tensor("w")).reshape(16, PAGE_ELEMS)
+    np.testing.assert_array_equal(got[3], ones[0])
+    assert child.stats["prefetch_wasted"] >= 1
+
+
+def test_window_bounds_inflight_depth():
+    """async_prefetch=N bounds TOTAL pages in flight — across touches and
+    across VMAs — not a per-touch or per-tensor issue quota."""
+    net, nodes = _cluster()
+    params = {"w": jnp.zeros(32 * PAGE_ELEMS, jnp.float32),
+              "b": jnp.zeros(32 * PAGE_ELEMS, jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(async_prefetch=2))
+    peak = 0
+    for p in range(24):
+        for name in ("w", "b"):                  # alternate between VMAs
+            child.touch_pages(name, [p])
+            peak = max(peak, child.prefetch_engine.pending_count())
+        net.advance(2e-6)
+    assert 0 < peak <= 2
+
+
+def test_async_prefetched_pages_feed_sibling_cache():
+    """Pages landed by the engine must be published to the sibling page
+    cache exactly like sync fetches — a second child resumes on hits."""
+    net, nodes = _cluster(cache=True)
+    params = {"w": jnp.arange(32 * PAGE_ELEMS, dtype=jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    handle = nodes[0].prepare_fork(parent)
+    c1 = handle.resume_on(nodes[1], ForkPolicy(async_prefetch=8))
+    c1.ensure_all()
+    assert c1.stats["prefetch_used"] > 0
+    c2 = handle.resume_on(nodes[1])
+    c2.ensure_all()
+    assert c2.stats["pages_cached"] == 32          # every page from the cache
+    np.testing.assert_array_equal(np.asarray(c2.ensure_tensor("w")),
+                                  np.asarray(params["w"]))
+
+
+def test_drain_after_reclaim_does_not_republish_cache():
+    """A reclaim between issue and drain destroys the VMA's DC targets and
+    broadcasts a cache drop; landing the in-flight payload afterwards must
+    NOT re-insert (owner, frame) cache entries — a reused owner frame would
+    serve another seed's bytes."""
+    net, nodes = _cluster(cache=True)
+    params = {"w": jnp.arange(32 * PAGE_ELEMS, dtype=jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(async_prefetch=8))
+    child.touch_pages("w", [0])                   # window goes in flight
+    assert child.prefetch_engine.pending_count() > 0
+    cached_before = len(nodes[1]._page_cache)
+    handle.reclaim()                              # DC keys die in flight
+    child.prefetch_engine.drain_all()             # payload lands (data ok)
+    assert len(nodes[1]._page_cache) == cached_before
+    got = child.materialize_pytree()              # rest via RPC fallback
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(params["w"]))
+
+
+def test_eager_window_bound_holds_across_tensors():
+    """lazy=False + materialize pipelining must respect the total window:
+    issue_window never puts a whole VMA in flight."""
+    net, nodes = _cluster()
+    params = {"w": jnp.zeros(24 * PAGE_ELEMS, jnp.float32),
+              "b": jnp.zeros(24 * PAGE_ELEMS, jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(async_prefetch=3))
+    peak = [0]
+    eng = child.prefetch_engine
+    orig = eng.issue
+
+    def spying_issue(name, pages):
+        n = orig(name, pages)
+        peak[0] = max(peak[0], eng.pending_count())
+        return n
+
+    eng.issue = spying_issue
+    child.ensure_all()
+    assert 0 < peak[0] <= 3
+    assert child.resident_fraction() == 1.0
+
+
+def test_read_blob_does_not_meter_sges():
+    net = Network()
+    NodeRuntime("n0", net, page_elems=64)
+    key = net.create_dc_target("n0")
+    net.read_blob("n1", "n0", 4096, key)
+    assert net.meter["dct.ops"] == 1
+    assert net.meter["dct.sges"] == 0              # SGEs are page-read-only
+
+
+def test_drain_all_never_waits_on_fully_stale_entry():
+    """If every page of an in-flight transfer was COW-won, drain_all drops
+    the payload without blocking the sim clock."""
+    net, nodes = _cluster()
+    params = {"w": jnp.zeros(16 * PAGE_ELEMS, jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(async_prefetch=4))
+    child.touch_pages("w", [0])                   # pages 1..4 in flight
+    pending = np.concatenate(
+        [e.pages for e in child.prefetch_engine._pending["w"]])
+    child.write_pages("w", pending,
+                      np.ones((pending.size, PAGE_ELEMS), np.float32))
+    t0, w0 = net.sim_time, net.meter["async_wait_s"]
+    child.prefetch_engine.drain_all()
+    assert net.sim_time == t0 and net.meter["async_wait_s"] == w0
+    assert child.stats["prefetch_wasted"] == pending.size
+
+
+def test_free_discards_inflight_prefetch():
+    net, nodes = _cluster()
+    params = {"w": jnp.zeros(32 * PAGE_ELEMS, jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(
+        nodes[1], ForkPolicy(async_prefetch=8))
+    child.touch_pages("w", [0])
+    assert child.prefetch_engine.pending_count() > 0
+    child.free()
+    assert child.prefetch_engine is None
+
+
+# ---------------------------------------------------------------------------
+# batched fallback daemon + ensure_tensor reassembly gating
+# ---------------------------------------------------------------------------
+
+
+def test_fallback_serve_mixes_swapped_and_live_in_one_gather():
+    net, nodes = _cluster()
+    params = {"w": jnp.arange(8 * PAGE_ELEMS, dtype=jnp.float32),
+              "b": jnp.arange(2 * PAGE_ELEMS, dtype=jnp.float32)}
+    parent = ModelInstance.create(nodes[0], "t", params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1])
+    child.touch_pages("w", [0])                    # one page via RDMA
+    nodes[0].swap_out_vma(parent, "w")             # rest must fall back
+    got = child.materialize_pytree()
+    np.testing.assert_array_equal(np.asarray(got["w"]),
+                                  np.asarray(params["w"]))
+    assert child.stats["pages_rpc"] == 7
+
+
+def test_ensure_tensor_skips_reassembly_without_residency_change():
+    net, nodes = _cluster()
+    params = _params(rng_seed=5)
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+    w = child.ensure_tensor("w")
+    reads = []
+    orig = nodes[1].pool.read_pages
+    nodes[1].pool.read_pages = lambda *a, **k: (reads.append(a), orig(*a, **k))[1]
+    try:
+        # a fault on a DISJOINT VMA must not force w's reassembly
+        child.ensure_tensor("b")
+        assert child.ensure_tensor("w") is w
+        gathers_for_w = [a for a in reads
+                         if len(a[1]) == child.aspace["w"].npages]
+        assert not gathers_for_w
+        # an actual residency change does reassemble
+        child.write_pages("w", [0], np.zeros((1, PAGE_ELEMS), np.float32))
+        assert child.ensure_tensor("w") is not w
+    finally:
+        nodes[1].pool.read_pages = orig
+
+
+def test_version_bumps_on_residency_and_dirty():
+    v = VMA.new_local("w", (PAGE_ELEMS * 4,), "float32",
+                      np.arange(4, dtype=np.int32))
+    c = v.child_view(1)
+    v0 = c.version
+    c.mark_resident([0, 1], [7, 8])
+    assert c.version > v0
+    v1 = c.version
+    c.mark_dirty([0])
+    assert c.version > v1

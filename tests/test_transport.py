@@ -66,14 +66,12 @@ def test_policy_coerce_roundtrip_with_transport_fields():
     assert d.page_fetch is None and d.descriptor_fetch is None
 
 
-def test_core_network_shim_warns_deprecation():
-    """The repro.core.network re-export follows the same warn-then-delete
-    cycle the tuple shims went through."""
-    import importlib
-    import sys
-    sys.modules.pop("repro.core.network", None)
-    with pytest.warns(DeprecationWarning, match="repro.net"):
-        importlib.import_module("repro.core.network")
+def test_core_network_shim_stays_deleted():
+    """The repro.core.network re-export finished its one-release
+    deprecation window (same warn-then-delete cycle as the repro.core.fork
+    tuple shims) and must stay gone."""
+    import importlib.util
+    assert importlib.util.find_spec("repro.core.network") is None
 
 
 def test_malformed_backend_rejected_at_registration():
