@@ -1,15 +1,47 @@
-"""Figure 14: peak fork throughput + bottleneck analysis: what limits a
-single seed — parent NIC bandwidth vs child CPU vs RPC handlers."""
+"""Figure 14 (extended): peak fork throughput — bottleneck analysis plus
+the placement plane's sharded fan-out and per-VMA routing sweeps.
+
+* ``fig14.mitosis.*`` — the paper's bottleneck model: what limits a single
+  seed (parent NIC bandwidth vs RPC handler capacity).
+* ``fig14.sharded.s{S}`` — one logical seed backed by S parent replicas
+  (``Coordinator.deploy_seed(replicas=S)``); K children route their VMAs
+  across the replica set, so fan-out makespan is the *busiest parent's*
+  NIC time (``Network.node_busy``) and children/sec scales with S at equal
+  bytes moved.
+* ``fig14.route.*`` — per-VMA transport routing: a mixed HotCold plan (hot
+  weights over ``dct``, cold optimizer state over ``shared_fs``) against
+  uniform single-transport baselines at equal working set.
+
+``run(write_json=path)`` (and ``--smoke``) writes the sweeps to
+``BENCH_fanout.json``; ``--smoke`` exits non-zero unless children/sec
+strictly increases S=1 -> 2 -> 4 at equal page bytes AND the mixed route
+plan beats the uniform ``shared_fs`` baseline on sim time.
+"""
 from __future__ import annotations
 
-from benchmarks.common import FUNCTIONS, deploy_parent, make_cluster, timed, touch_fraction
+import argparse
+import json
+import sys
+
+import numpy as np
+
+from benchmarks.common import (FUNCTIONS, deploy_parent, make_cluster,
+                               params_for, timed, touch_fraction)
 from repro.fork import ForkPolicy
+from repro.placement import HotColdPolicy, SpreadPolicy
+from repro.platform.coordinator import Coordinator, FunctionDef
 
 TOUCH = 0.6
-K = 6  # forks measured
+K = 6            # forks measured (bottleneck model)
+
+SHARD_FN = "json"       # ~18 MB, 11 VMAs: spreads well, stays smoke-fast
+SHARD_K = 8             # children per sharded fan-out
+SHARD_S = (1, 2, 4)     # parent replica counts swept
+COLD_FRAC_NAME = "opt"  # cold state prefix the HotCold policy matches
 
 
-def run():
+def run_bottleneck():
+    """The original single-seed bottleneck rows (paper §7.2)."""
     rows = []
     for fname in FUNCTIONS:
         net, nodes = make_cluster(3)
@@ -34,3 +66,169 @@ def run():
             rpc_bound_forks_per_s=int(rpc_cap),
             bottleneck="nic" if nic_forks_per_s < rpc_cap else "rpc"))
     return rows
+
+
+def _sharded_coordinator(s: int):
+    """Coordinator over S parent slots + SHARD_K child nodes; the sharded
+    seed's replicas land on nodes[0..S-1] (deterministic round-robin)."""
+    net, nodes = make_cluster(s + SHARD_K)
+    coord = Coordinator(net, nodes)
+    coord.register_function(FunctionDef(
+        name="fn", arch=FUNCTIONS[SHARD_FN],
+        make_params=lambda: params_for(SHARD_FN),
+        behavior=lambda inst, ctx: {}))
+    seed = coord.deploy_seed("fn", nodes[0], replicas=s,
+                             placement=SpreadPolicy())
+    return net, nodes, seed
+
+
+def run_sharded():
+    """children/sec vs replica count at equal bytes: the busiest parent's
+    NIC time is the fan-out makespan, and sharding divides it."""
+    rows = []
+    policy = ForkPolicy(descriptor_fetch="rpc")
+    for s in SHARD_S:
+        net, nodes, seed = _sharded_coordinator(s)
+        parents = list(seed.parent_nodes)
+        net.reset_meter()
+
+        def fan_out(s=s):
+            children = [seed.resume_on(nodes[s + i], policy)
+                        for i in range(SHARD_K)]
+            for c in children:
+                touch_fraction(c, TOUCH, 0, batch=True)
+            return children
+        t = timed(net, fan_out)
+        # payload pages only: auth RPCs and descriptors scale with S, the
+        # working set must not
+        page_bytes = sum(c.stats["pages_rdma"] for c in t.out) \
+            * nodes[0].pool.page_elems * 4
+        makespan = max(net.node_busy(p) for p in parents)
+        rows.append(dict(
+            name=f"fig14.sharded.s{s}",
+            us_per_call=int(t.wall_s * 1e6),
+            replicas=s,
+            children=SHARD_K,
+            page_bytes=int(page_bytes),
+            dct_bytes=int(net.meter["dct.bytes"]),
+            busiest_parent_us=int(makespan * 1e6),
+            children_per_s=int(SHARD_K / makespan)))
+    return rows
+
+
+def _routed_parent(node):
+    """A seed with hot weights AND cold optimizer state (same byte count
+    as the weights), so hot/cold routing has something to split."""
+    inst = deploy_parent(node, SHARD_FN)
+    elems = sum(int(np.prod(inst.aspace[n].shape)) for n in inst.leaf_names)
+    for shadow in ("m", "v"):
+        inst.add_tensor(f"{COLD_FRAC_NAME}/{shadow}",
+                        np.zeros(elems // 2, np.float32))
+    return inst
+
+
+def run_routing():
+    """Mixed per-VMA transports vs uniform baselines at equal working set."""
+    rows = {}
+    cases = {
+        "uniform_fs": dict(policy=ForkPolicy(page_fetch="shared_fs",
+                                             descriptor_fetch="rpc")),
+        "uniform_dct": dict(policy=ForkPolicy(descriptor_fetch="rpc")),
+        "mixed": dict(policy=ForkPolicy(descriptor_fetch="rpc"),
+                      placement=HotColdPolicy(hot="dct", cold="shared_fs")),
+    }
+    for label, kw in cases.items():
+        net, nodes = make_cluster(2)
+        parent = _routed_parent(nodes[0])
+        handle = nodes[0].prepare_fork(parent)
+        child = handle.resume_on(nodes[1], kw["policy"],
+                                 placement=kw.get("placement"))
+        net.reset_meter()
+        t = timed(net, touch_fraction, child, 1.0, 0, 0.0, True)
+        rows[label] = dict(
+            name=f"fig14.route.{label}",
+            us_per_call=int(t.wall_s * 1e6),
+            sim_us=int(t.sim_s * 1e6),
+            dct_bytes=int(net.meter["dct.bytes"]),
+            dfs_bytes=int(net.meter["shared_fs.bytes"]),
+            total_bytes=int(net.meter["dct.bytes"]
+                            + net.meter["shared_fs.bytes"]))
+    return rows
+
+
+def run_sweeps(write_json=None):
+    """Sharded + routing sweeps; returns (rows, summary)."""
+    sharded = run_sharded()
+    routed = run_routing()
+    rows = sharded + list(routed.values())
+    by_s = {r["replicas"]: r for r in sharded}
+    summary = {
+        "schema": "fanout-bench/v1",
+        "rows": rows,
+        "sharded": {
+            "children": SHARD_K,
+            "children_per_s": {f"s{s}": by_s[s]["children_per_s"]
+                               for s in SHARD_S},
+            "equal_bytes": len({by_s[s]["page_bytes"]
+                                for s in SHARD_S}) == 1,
+            "scaling": all(
+                by_s[a]["children_per_s"] < by_s[b]["children_per_s"]
+                for a, b in zip(SHARD_S, SHARD_S[1:])),
+        },
+        "routing": {
+            "mixed_sim_us": routed["mixed"]["sim_us"],
+            "uniform_fs_sim_us": routed["uniform_fs"]["sim_us"],
+            "uniform_dct_sim_us": routed["uniform_dct"]["sim_us"],
+            "equal_bytes": routed["mixed"]["total_bytes"]
+            == routed["uniform_fs"]["total_bytes"],
+            "mixed_beats_uniform": routed["mixed"]["sim_us"]
+            < routed["uniform_fs"]["sim_us"],
+            # what per-VMA routing buys the parent NIC vs uniform dct
+            "mixed_dct_bytes": routed["mixed"]["dct_bytes"],
+            "uniform_dct_bytes": routed["uniform_dct"]["dct_bytes"],
+        },
+    }
+    if write_json:
+        # wall time is machine noise — the tracked artifact keeps only the
+        # deterministic sim/meter fields so diffs mean real regressions
+        tracked = dict(summary)
+        tracked["rows"] = [{k: v for k, v in r.items() if k != "us_per_call"}
+                           for r in rows]
+        with open(write_json, "w") as f:
+            json.dump(tracked, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return rows, summary
+
+
+def run(write_json=None):
+    """Harness entry point (benchmarks/run.py): bottleneck + sweep rows."""
+    return run_bottleneck() + run_sweeps(write_json=write_json)[0]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="write BENCH_fanout.json and fail unless sharded "
+                         "fan-out scales with S and the mixed route plan "
+                         "beats the uniform baseline")
+    ap.add_argument("--json", default="BENCH_fanout.json",
+                    help="output path for the fan-out summary")
+    args = ap.parse_args()
+    rows, s = run_sweeps(write_json=args.json)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"wrote {args.json}")
+    if args.smoke:
+        sh, rt = s["sharded"], s["routing"]
+        ok = sh["scaling"] and sh["equal_bytes"] \
+            and rt["mixed_beats_uniform"] and rt["equal_bytes"]
+        print(f"smoke: children/s {sh['children_per_s']} "
+              f"(equal_bytes={sh['equal_bytes']}), mixed "
+              f"{rt['mixed_sim_us']}us vs uniform {rt['uniform_fs_sim_us']}us"
+              f" -> {'OK' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

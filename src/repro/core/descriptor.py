@@ -47,6 +47,10 @@ class Descriptor:
     vmas: List[dict]                    # VMA.table_dict() per leaf
     registers: Dict[str, Any]           # step, rng, inline small state
     extra: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # per-VMA route plan (repro.placement): vma name -> {"owner", "transport"}.
+    # Children fetch each VMA from its routed owner over its routed fabric;
+    # absent (legacy blobs) = every VMA at parent_node over the default.
+    routes: Dict[str, Dict[str, Any]] = dataclasses.field(default_factory=dict)
 
     def to_bytes(self) -> bytes:
         return msgpack.packb(dataclasses.asdict(self), default=_pack_default,
@@ -60,6 +64,12 @@ class Descriptor:
 
     def vma_objects(self) -> List[VMA]:
         return [VMA.from_table_dict(d) for d in self.vmas]
+
+    def route_for(self, name: str) -> Dict[str, Any]:
+        """The route of VMA ``name``: explicit entry, else the implicit
+        single-parent default (owner = parent_node, default transport)."""
+        return self.routes.get(name) or {"owner": self.parent_node,
+                                         "transport": None}
 
     @property
     def nbytes(self) -> int:

@@ -42,7 +42,8 @@ class ModelInstance:
         self._owned_frames: Dict[str, list] = {}
         self.instance_id = node.new_instance_id()
         # page-fetch transport name (repro.net registry); None = the
-        # network's default backend.  Set from ForkPolicy.page_fetch.
+        # network's default backend.  Set from ForkPolicy.page_fetch; a
+        # routed VMA's own `VMA.transport` takes precedence per VMA.
         self.page_transport: Optional[str] = None
         # ForkPolicy.prefetch: pages pulled per fault when the caller
         # doesn't pass an explicit prefetch
@@ -125,7 +126,11 @@ class ModelInstance:
         yields (owner, dc_key, pages, remote_frames) for what is left to
         read off-node.  Hop-0 entries (swapped-out locals) are served via
         the fallback daemon here.  Shared by the synchronous fault path
-        and the async PrefetchEngine so probe/adopt semantics can't drift."""
+        and the async PrefetchEngine so probe/adopt semantics can't drift.
+
+        Owners resolve per VMA: a routed VMA (sharded seed / placement
+        plan) carries its own ancestry chain; unrouted VMAs fall back to
+        the instance-level chain."""
         hops = vma.owner_hop[want]
         for hop in np.unique(hops):
             plist = want[hops == hop]
@@ -133,7 +138,7 @@ class ModelInstance:
                 # local frames that lost PRESENT (swapped out): fallback path
                 self._fallback_fetch(vma, self.node.node_id, plist)
                 continue
-            owner = self.ancestry[int(hop) - 1]
+            owner = vma.owner_at(int(hop), self.ancestry)
             key = vma.dc_keys.get(int(hop), -1)
             remote_frames = vma.frames[plist]
 
@@ -159,7 +164,7 @@ class ModelInstance:
             try:
                 data = self.node.network.read_pages(
                     self.node.node_id, owner, vma.dtype, remote_frames, key,
-                    transport=self.page_transport)
+                    transport=vma.transport or self.page_transport)
                 self.stats["pages_rdma"] += int(plist.size)
             except AccessRevoked:
                 # VA->PA changed at the owner (swap, reclaim): RPC fallback

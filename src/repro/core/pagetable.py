@@ -7,12 +7,14 @@ Each tensor of an instance is one VMA.  Per page we track:
   flags     : PRESENT | DIRTY
 A VMA also carries its DC keys (connection-based access control, §5.4):
 one key per ancestor hop, since after partial COW a VMA can mix pages owned
-by several ancestors (§5.5).
+by several ancestors (§5.5) — plus its ROUTE (repro.placement): a per-VMA
+owner chain and transport name, so one child's VMAs can page in from
+different parent replicas over different fabrics.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -36,6 +38,13 @@ class VMA:
     version: int = 0             # bumped on every residency/content change;
                                  # lets callers cache assembled tensors and
                                  # reassemble only when pages actually moved
+    # -- route (repro.placement): per-VMA owner chain + transport ----------
+    ancestry: List[str] = dataclasses.field(default_factory=list)
+                                 # hop h reads from ancestry[h-1]; empty =
+                                 # fall back to the instance-level chain
+    transport: Optional[str] = None
+                                 # page-fetch transport for THIS VMA; None =
+                                 # the instance/policy default
 
     @classmethod
     def new_local(cls, name, shape, dtype, frames):
@@ -47,12 +56,20 @@ class VMA:
             flags=np.full(n, F_PRESENT, np.uint8),
         )
 
-    def child_view(self, parent_key: int) -> "VMA":
+    def child_view(self, parent_key: int, parent_node: Optional[str] = None,
+                   default_ancestry=()) -> "VMA":
         """Fork: child's pages point one hop further up; nothing resident.
 
         Pages the parent owned (hop 0) become hop 1, guarded by the freshly
         assigned `parent_key`; pages the parent itself still reads from
         ancestors shift one hop up and keep their ancestors' keys.
+
+        ``parent_node`` stamps the child VMA's own owner chain (route):
+        hop 1 is the parent, deeper hops are the parent's chain (its own
+        per-VMA ancestry, or ``default_ancestry`` — the descriptor's
+        instance-level chain — when it has none).  The route transport is
+        inherited: a VMA pinned to e.g. ``shared_fs`` stays there across
+        generations until a placement policy re-routes it.
         """
         hop = self.owner_hop.astype(np.int32)
         # Pages the parent had not COW'd still belong to the same ancestor:
@@ -64,6 +81,9 @@ class VMA:
                 f"fork depth exceeds {MAX_HOPS} hops (paper §5.5 PTE encoding)")
         keys = {h + 1: k for h, k in self.dc_keys.items()}
         keys[1] = parent_key
+        chain = []
+        if parent_node is not None:
+            chain = [parent_node] + list(self.ancestry or default_ancestry)
         return VMA(
             name=self.name, shape=self.shape, dtype=self.dtype,
             npages=self.npages,
@@ -71,7 +91,16 @@ class VMA:
             frames=self.frames.copy(),
             flags=np.zeros(self.npages, np.uint8),
             dc_keys=keys,
+            ancestry=chain,
+            transport=self.transport,
         )
+
+    def owner_at(self, hop: int, default_ancestry=()) -> str:
+        """Node id serving this VMA's pages at ``hop`` (>= 1), resolved
+        against the VMA's own route chain, falling back to the instance
+        chain the caller passes."""
+        chain = self.ancestry or default_ancestry
+        return chain[hop - 1]
 
     # -- queries -------------------------------------------------------------
 
@@ -140,6 +169,8 @@ class VMA:
             "owner_hop": self.owner_hop.tobytes(),
             "frames": self.frames.tobytes(),
             "dc_keys": {int(h): int(k) for h, k in self.dc_keys.items()},
+            "ancestry": list(self.ancestry),
+            "transport": self.transport,
         }
 
     @classmethod
@@ -151,6 +182,8 @@ class VMA:
             frames=np.frombuffer(d["frames"], np.int32).copy(),
             flags=np.zeros(n, np.uint8),
             dc_keys={int(h): int(k) for h, k in d["dc_keys"].items()},
+            ancestry=list(d.get("ancestry") or []),
+            transport=d.get("transport"),
         )
 
 

@@ -93,7 +93,8 @@ class PrefetchEngine:
             try:
                 data = net.read_pages(node.node_id, owner, vma.dtype,
                                       rframes, key,
-                                      transport=inst.page_transport,
+                                      transport=vma.transport
+                                      or inst.page_transport,
                                       async_read=True)
             except AccessRevoked:
                 continue            # sync path will take the RPC fallback

@@ -115,10 +115,13 @@ class ForkHandle:
 
     # -- lifecycle ----------------------------------------------------------
 
-    def resume_on(self, child_node, policy: Optional[ForkPolicy] = None) -> ModelInstance:
-        """Fork a child onto ``child_node``: authentication RPC (lease +
-        generation checked at the parent), one-sided descriptor fetch, child
-        page tables shifted one hop up, then lazy paging per ``policy``."""
+    def fetch_descriptor(self, child_node,
+                         policy: Optional[ForkPolicy] = None) -> Descriptor:
+        """Steps 1–2 of a fork: authentication RPC (lease + generation
+        checked at the parent, §5.2) and the descriptor transfer through the
+        policy's named transport.  Shared by ``resume_on`` and the sharded
+        multi-parent resume (``repro.placement.ShardedSeed``), which fetches
+        one descriptor per replica it routes VMAs to."""
         policy = ForkPolicy.coerce(policy)
         net = child_node.network
         if self.parent_node not in net.nodes:
@@ -144,33 +147,38 @@ class ForkHandle:
             blob = net.rpc(child_node.node_id, self.parent_node,
                            info["nbytes"], parent.seed_blob, self.handler_id,
                            info["desc_key"], transport=dt.name)
-        desc = Descriptor.from_bytes(blob)
+        return Descriptor.from_bytes(blob)
 
-        if policy.sibling_cache is not None:
-            child_node.cache_enabled = policy.sibling_cache
+    def resume_on(self, child_node, policy: Optional[ForkPolicy] = None,
+                  placement=None) -> ModelInstance:
+        """Fork a child onto ``child_node``: authentication RPC (lease +
+        generation checked at the parent), one-sided descriptor fetch, child
+        page tables shifted one hop up, then lazy paging per ``policy``.
 
-        # 3) child address space: page tables shifted one hop up
+        ``placement`` (a ``repro.placement`` PlacementPolicy) optionally
+        routes each VMA over its own transport (e.g. hot weights on ``dct``,
+        cold optimizer state on ``shared_fs``); with a single parent every
+        route's owner is this handle's parent."""
+        policy = ForkPolicy.coerce(policy)
+        desc = self.fetch_descriptor(child_node, policy)
+        plan = None
+        if placement is not None:
+            plan = placement.plan_for(desc, [self.parent_node])
+
+        # 3) child address space: page tables shifted one hop up, each VMA
+        #    stamped with its owner chain (and plan transport, if routed)
         prepared = desc.extra["prepared_keys"]
         aspace = {}
         for vd in desc.vmas:
             vma = VMA.from_table_dict(vd)
-            aspace[vma.name] = vma.child_view(prepared[vma.name])
+            vma = vma.child_view(prepared[vma.name],
+                                 parent_node=self.parent_node,
+                                 default_ancestry=desc.ancestry)
+            if plan is not None and vma.name in plan:
+                vma.transport = plan[vma.name].transport or vma.transport
+            aspace[vma.name] = vma
         ancestry = [self.parent_node] + list(desc.ancestry)
-
-        inst = ModelInstance(child_node, desc.arch, desc.kind, aspace,
-                             desc.leaf_paths, desc.extra["leaf_names"],
-                             ancestry, dict(desc.registers))
-        inst.page_transport = policy.page_fetch
-        if policy.async_prefetch:
-            from repro.core.prefetch import PrefetchEngine
-            inst.prefetch_engine = PrefetchEngine(inst, policy.async_prefetch)
-        if not policy.lazy:
-            # eager restore pipelines through the engine when one is
-            # attached: the next VMA's pages transfer while this one
-            # assembles
-            inst.ensure_all(prefetch=0)
-        inst.default_prefetch = policy.prefetch
-        return inst
+        return instantiate_child(child_node, policy, desc, aspace, ancestry)
 
     def renew(self, extend: Optional[float] = None) -> "ForkHandle":
         """Extend the lease at the parent by ``extend`` seconds (default:
@@ -222,6 +230,29 @@ class ForkHandle:
         self.reclaim()
 
 
+def instantiate_child(child_node, policy: ForkPolicy, desc: Descriptor,
+                      aspace, ancestry) -> ModelInstance:
+    """Build and policy-configure the child instance from an assembled
+    address space — the tail every resume path shares (single-parent
+    ``resume_on`` and the sharded multi-parent resume), so prefetch/eager/
+    cache semantics cannot drift between them."""
+    if policy.sibling_cache is not None:
+        child_node.cache_enabled = policy.sibling_cache
+    inst = ModelInstance(child_node, desc.arch, desc.kind, aspace,
+                         desc.leaf_paths, desc.extra["leaf_names"],
+                         ancestry, dict(desc.registers))
+    inst.page_transport = policy.page_fetch
+    if policy.async_prefetch:
+        from repro.core.prefetch import PrefetchEngine
+        inst.prefetch_engine = PrefetchEngine(inst, policy.async_prefetch)
+    if not policy.lazy:
+        # eager restore pipelines through the engine when one is attached:
+        # the next VMA's pages transfer while this one assembles
+        inst.ensure_all(prefetch=0)
+    inst.default_prefetch = policy.prefetch
+    return inst
+
+
 def prepare_fork(node, instance, lease: Optional[float] = None) -> ForkHandle:
     """Prepare ``instance`` as a seed on ``node`` (paper Figure 7
     fork_prepare, plus a lease): descriptor build, DC-key assignment from the
@@ -252,6 +283,8 @@ def prepare_fork(node, instance, lease: Optional[float] = None) -> ForkHandle:
         registers=dict(instance.registers),
         extra={"prepared_keys": prepared_keys,
                "leaf_names": list(instance.leaf_names)},
+        routes={name: {"owner": node.node_id, "transport": v.transport}
+                for name, v in instance.aspace.items()},
     )
     blob = desc.to_bytes()
     node.register_seed(handler_id, SeedEntry(

@@ -39,6 +39,10 @@ class Network:
         # transfers serialize against each other on their channel, not
         # against the sim clock
         self._channel_busy: Dict[tuple, float] = {}
+        # per-node cumulative link occupancy (seconds of wire time on either
+        # end of a transfer): the parent-NIC contention ledger that fan-out
+        # benchmarks and the transport-aware scheduler read
+        self._node_busy: Counter = Counter()
         # DC targets: (node_id, dc_key) -> True while valid
         self._dc_targets: Dict[tuple, bool] = {}
         self._next_key = 1
@@ -110,6 +114,24 @@ class Network:
     def set_channel_busy(self, src: str, dst: str, until: float) -> None:
         self._channel_busy[(src, dst)] = until
 
+    def channel_backlog(self, src: str, dst: str) -> float:
+        """Seconds of queued transfer still ahead of ``sim_time`` on the
+        (src, dst) channel — the load signal schedulers weigh."""
+        return max(0.0, self.channel_busy(src, dst) - self.sim_time)
+
+    def account_node_busy(self, src: str, dst: str, seconds: float) -> None:
+        """Charge ``seconds`` of wire occupancy to both endpoints' links.
+        Summed per node this is the NIC-time ledger: a parent serving a
+        K-way fan-out accumulates the whole working set here while each
+        child accumulates only its own share."""
+        self._node_busy[src] += seconds
+        self._node_busy[dst] += seconds
+
+    def node_busy(self, node_id: str) -> float:
+        """Cumulative link-busy seconds charged to ``node_id`` since the
+        last ``reset_meter``."""
+        return self._node_busy.get(node_id, 0.0)
+
     def advance(self, seconds: float) -> None:
         """Model ``seconds`` of child-side *execution* on the critical path.
         Channel busy-until stamps are absolute, so in-flight async transfers
@@ -134,6 +156,12 @@ class Network:
             return False
         self._connections.add(key)
         return True
+
+    def has_connection(self, transport: str, src: str, dst: str) -> bool:
+        """True iff the (src, dst) pair has already paid ``transport``'s
+        setup cost — what a transport-aware scheduler checks before
+        charging a candidate node the connect estimate."""
+        return (transport, src, dst) in self._connections
 
     # -- data plane ---------------------------------------------------------------
 
@@ -177,3 +205,4 @@ class Network:
         self.meter.clear()
         self.sim_time = 0.0
         self._channel_busy.clear()   # busy stamps are absolute on the clock
+        self._node_busy.clear()

@@ -220,6 +220,7 @@ class Transport(abc.ABC):
         start = max(self.net.sim_time, self.net.channel_busy(src, dst))
         end = start + seconds
         self.net.set_channel_busy(src, dst, end)
+        self.net.account_node_busy(src, dst, seconds)
         if async_read:
             meter[f"{self.name}.async_ops"] += ops
         else:

@@ -1,0 +1,32 @@
+"""repro.placement — the seed placement/routing plane.
+
+Sits between the fork control plane (:mod:`repro.fork`) and the pluggable
+transports (:mod:`repro.net`): sharded multi-parent seeds
+(:class:`ShardedSeed`), explicit per-VMA routes (:class:`RoutePlan` /
+:class:`VMARoute`) chosen by a :class:`PlacementPolicy`
+(:class:`SpreadPolicy`, :class:`HotColdPolicy`), and transport-/load-aware
+node scheduling (:class:`RoundRobinScheduler`,
+:class:`TransportAwareScheduler`).  See ``docs/placement.md``.
+"""
+from repro.placement.policy import (DEFAULT_COLD_PATTERN, HotColdPolicy,
+                                    PlacementPolicy, SpreadPolicy)
+from repro.placement.route import (RoutePlan, VMAInfo, VMARoute,
+                                   descriptor_vma_infos, route_demand)
+from repro.placement.scheduler import (RoundRobinScheduler,
+                                       TransportAwareScheduler)
+from repro.placement.sharded import ShardedSeed
+
+__all__ = [
+    "DEFAULT_COLD_PATTERN",
+    "HotColdPolicy",
+    "PlacementPolicy",
+    "RoundRobinScheduler",
+    "RoutePlan",
+    "ShardedSeed",
+    "SpreadPolicy",
+    "TransportAwareScheduler",
+    "VMAInfo",
+    "VMARoute",
+    "descriptor_vma_infos",
+    "route_demand",
+]

@@ -1,0 +1,102 @@
+"""RoutePlan — the explicit per-VMA route of one fork.
+
+The implicit route of the single-parent design ("every VMA pages in from
+``Descriptor.parent_node`` over the instance transport") becomes a
+first-class object: one :class:`VMARoute` per VMA naming the owner node
+that serves its pages and the transport it rides.  Placement policies
+(:mod:`repro.placement.policy`) build plans; ``ForkHandle.resume_on`` /
+``ShardedSeed.resume_on`` apply them by stamping each child VMA's route
+fields (``VMA.ancestry`` / ``VMA.transport``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class VMAInfo:
+    """What a placement policy sees of one VMA: name + payload size."""
+
+    name: str
+    nbytes: int
+
+
+def descriptor_vma_infos(desc) -> List[VMAInfo]:
+    """VMAInfo list for a descriptor's page tables (metadata only)."""
+    return [VMAInfo(name=vd["name"],
+                    nbytes=int(np.prod(vd["shape"]))
+                    * np.dtype(vd["dtype"]).itemsize)
+            for vd in desc.vmas]
+
+
+@dataclasses.dataclass(frozen=True)
+class VMARoute:
+    """One VMA's route: the parent replica serving its pages and the
+    transport name the reads ride (None = the policy/network default)."""
+
+    owner: str
+    transport: Optional[str] = None
+
+
+@dataclasses.dataclass
+class RoutePlan:
+    """vma name -> VMARoute for one resume.  Serializable (descriptors and
+    control-plane messages carry it as plain dicts)."""
+
+    routes: Dict[str, VMARoute] = dataclasses.field(default_factory=dict)
+
+    def __getitem__(self, name: str) -> VMARoute:
+        return self.routes[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.routes
+
+    def owners(self) -> List[str]:
+        """Distinct owner nodes, in first-use order."""
+        seen: Dict[str, None] = {}
+        for r in self.routes.values():
+            seen.setdefault(r.owner, None)
+        return list(seen)
+
+    def transports(self) -> List[Optional[str]]:
+        """Distinct transport names (None = default), in first-use order."""
+        seen: Dict[Optional[str], None] = {}
+        for r in self.routes.values():
+            seen.setdefault(r.transport, None)
+        return list(seen)
+
+    def by_owner(self) -> Dict[str, List[str]]:
+        """owner -> [vma names] it serves under this plan."""
+        out: Dict[str, List[str]] = {}
+        for name, r in self.routes.items():
+            out.setdefault(r.owner, []).append(name)
+        return out
+
+    def reroute(self, lost_owner: str, plan: "RoutePlan") -> None:
+        """Replace every route through ``lost_owner`` with the matching
+        route from ``plan`` (the degradation path: a replica died between
+        planning and fetch)."""
+        for name, r in list(self.routes.items()):
+            if r.owner == lost_owner:
+                self.routes[name] = plan.routes[name]
+
+    def to_dict(self) -> Dict[str, dict]:
+        return {n: {"owner": r.owner, "transport": r.transport}
+                for n, r in self.routes.items()}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, dict]) -> "RoutePlan":
+        return cls(routes={n: VMARoute(owner=r["owner"],
+                                       transport=r.get("transport"))
+                           for n, r in d.items()})
+
+
+def route_demand(owners: Iterable[str],
+                 transports: Iterable[Optional[str]]) -> List[tuple]:
+    """(owner, transport) pairs a scheduler scores a candidate child node
+    against — the cross product of a seed's replica set and its policy's
+    transport mix."""
+    return [(o, t) for o in owners for t in transports]

@@ -6,21 +6,29 @@ schedules them onto invoker nodes, accelerating startup via long-lived seeds
 and state transfer via short-lived seeds, exactly mirroring the paper's Fn
 integration.
 
-The seed store holds leased ``ForkHandle`` capabilities (repro.fork): lease
-freshness, renewal and reclamation all go through the handle instead of the
-old raw (handler_id, auth_key) SeedRecord tuples.
+The seed store holds leased ``ForkHandle`` capabilities (repro.fork) — or,
+for sharded seeds, a ``ShardedSeed`` (repro.placement) wrapping S replica
+handles behind one logical record: lease freshness, renewal and reclamation
+all go through the handle surface instead of the old raw (handler_id,
+auth_key) SeedRecord tuples.  Node selection is a pluggable scheduler
+(transport- and load-aware by default, exclusion-stable round-robin
+fallback); a seed replica whose parent drops out of the network is purged
+on sight and telemetered as ``parent_lost``, and ``gc()`` re-replicates
+sharded seeds back to their target replica count.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
 from collections import Counter
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 
 from repro.core.instance import ModelInstance
 from repro.fork import ForkHandle, ForkPolicy
+from repro.placement import (PlacementPolicy, ShardedSeed,
+                             TransportAwareScheduler, route_demand)
 from repro.platform.node import NodeRuntime
 
 DEFAULT_SEED_KEEPALIVE = 600.0      # §6.2: 10 min vs caching's 1 min
@@ -45,35 +53,67 @@ class ForkTreeNode:
     children: List["ForkTreeNode"] = dataclasses.field(default_factory=list)
 
 
+Seed = Union[ForkHandle, ShardedSeed]
+
+
+def _seed_handles(seed: Seed) -> List[ForkHandle]:
+    """The replica handles behind a seed-store entry (one for a plain
+    handle) — the seam that lets every lifecycle pass treat sharded and
+    unsharded seeds uniformly."""
+    return list(seed.handles) if isinstance(seed, ShardedSeed) else [seed]
+
+
 class Coordinator:
-    def __init__(self, network, nodes: List[NodeRuntime], clock=time.monotonic):
+    def __init__(self, network, nodes: List[NodeRuntime], clock=time.monotonic,
+                 scheduler=None, seed_replicas: int = 1,
+                 seed_placement: Optional[PlacementPolicy] = None):
         self.network = network
         self.nodes = {n.node_id: n for n in nodes}
         self.clock = clock
         self.functions: Dict[str, FunctionDef] = {}
-        self.seed_store: Dict[str, ForkHandle] = {}    # func -> leased handle
+        self.seed_store: Dict[str, Seed] = {}          # func -> seed record
         self.fork_trees: Dict[str, ForkTreeNode] = {}
         self.cached: Dict[str, List[tuple]] = {}       # func -> [(inst, ts)]
-        # per-function lease churn (renewals/expiries/revocations) for
-        # fig20-style spike replays; surfaced by gc()
+        # per-function lease churn (renewals/expiries/revocations/losses)
+        # for fig20-style spike replays; surfaced by gc()
         self.lease_telemetry: Dict[str, Counter] = {}
-        self._rr = 0
+        # node selection is pluggable; the default scores candidates by
+        # per-backend setup cost + channel backlog and degrades to a
+        # deterministic, exclusion-stable round-robin without context
+        self.scheduler = scheduler or TransportAwareScheduler(network)
+        # replication defaults applied by the coldstart auto-seed path
+        self.seed_replicas = seed_replicas
+        self.seed_placement = seed_placement
 
     def _lease_event(self, func: str, event: str, n: int = 1) -> None:
         self.lease_telemetry.setdefault(func, Counter())[event] += n
+
+    def _count_lost(self, func: str, lost: List[str]) -> None:
+        if lost:
+            self._lease_event(func, "parent_lost", len(lost))
 
     # -- registry ---------------------------------------------------------
 
     def register_function(self, fdef: FunctionDef) -> None:
         self.functions[fdef.name] = fdef
 
-    def pick_node(self, exclude=()) -> NodeRuntime:
-        ids = [i for i in self.nodes if self.nodes[i].alive and i not in exclude]
-        if not ids:
-            raise RuntimeError("no live nodes")
-        node = self.nodes[ids[self._rr % len(ids)]]
-        self._rr += 1
-        return node
+    def pick_node(self, exclude=(), func: Optional[str] = None) -> NodeRuntime:
+        """Schedule the next child.  With ``func``, the scheduler sees the
+        seed's route demand — its replica parents × its placement policy's
+        transport mix — and lands the child where connection setup (paid RC
+        connects amortize, fresh ones don't) plus channel backlog is
+        cheapest."""
+        return self.scheduler.pick(self.nodes, exclude=exclude,
+                                   demand=self._route_demand(func))
+
+    def _route_demand(self, func: Optional[str]):
+        seed = self.seed_store.get(func) if func else None
+        if seed is None:
+            return None
+        if isinstance(seed, ShardedSeed):
+            return route_demand(seed.parent_nodes,
+                                seed.placement.transport_hints())
+        return route_demand([seed.parent_node], [None])
 
     # -- startup paths ------------------------------------------------------
 
@@ -83,28 +123,78 @@ class Coordinator:
         inst = ModelInstance.create(node, fdef.arch, params, kind="weights")
         # §6.2: cache only the FIRST coldstart container platform-wide as seed
         if func not in self.seed_store:
-            self.deploy_seed(func, node, instance=inst)
+            self.deploy_seed(func, node, instance=inst,
+                             replicas=self.seed_replicas,
+                             placement=self.seed_placement)
         return inst
 
-    def deploy_seed(self, func: str, node: NodeRuntime,
+    def deploy_seed(self, func: str, node: Optional[NodeRuntime] = None,
                     instance: Optional[ModelInstance] = None,
                     long_lived: bool = True,
-                    keep_alive: float = DEFAULT_SEED_KEEPALIVE) -> ForkHandle:
+                    keep_alive: float = DEFAULT_SEED_KEEPALIVE,
+                    replicas: int = 1,
+                    placement: Optional[PlacementPolicy] = None) -> Seed:
+        """Prepare ``func``'s seed on ``node``.  ``replicas=S`` shards the
+        logical seed over S parents: the origin handle is replicated onto
+        S-1 further nodes through the ordinary fork path (eager restore,
+        then prepare), and children route their VMAs across the replica set
+        per ``placement`` (byte-balanced spread by default).  Returns the
+        plain ``ForkHandle`` for an unsharded seed, else the
+        ``ShardedSeed``."""
         fdef = self.functions[func]
+        node = node or self.pick_node()
         if instance is None:
             instance = ModelInstance.create(node, fdef.arch, fdef.make_params(),
                                             kind="weights")
         handle = node.prepare_fork(instance, lease=keep_alive)
+        seed: Seed = handle
+        if replicas > 1 or placement is not None:
+            seed = ShardedSeed([handle], placement=placement,
+                               target_replicas=replicas)
+            self._replicate(func, seed, keep_alive=keep_alive,
+                            telemetry=False)
         if long_lived:
-            self.seed_store[func] = handle
-        return handle
+            self.seed_store[func] = seed
+        return seed
+
+    def _replicate(self, func: str, seed: ShardedSeed,
+                   keep_alive: Optional[float] = None,
+                   telemetry: bool = True) -> int:
+        """Grow ``seed`` back to its target replica count by forking a live
+        replica onto nodes not already hosting one.  Returns replicas
+        added; stops early when no source replica or spare node exists."""
+        added = 0
+        while seed.replicas < seed.target_replicas:
+            live = seed.live_handles()
+            if not live:
+                break
+            src = live[0]
+            try:
+                node = self.pick_node(exclude=set(seed.parent_nodes))
+            except RuntimeError:
+                break
+            rinst = src.resume_on(node, ForkPolicy(lazy=False))
+            lease = keep_alive if keep_alive is not None \
+                else self._seed_lease(src)
+            seed.add_replica(node.prepare_fork(rinst, lease=lease))
+            added += 1
+            if telemetry:
+                self._lease_event(func, "rereplicated")
+        return added
+
+    def _seed_lease(self, handle: ForkHandle) -> Optional[float]:
+        """The lease duration a replacement replica should inherit."""
+        rt = handle.runtime
+        entry = rt.seeds.get(handle.handler_id) if rt is not None else None
+        return entry.lease_duration if entry is not None \
+            else DEFAULT_SEED_KEEPALIVE
 
     def acquire_instance(self, func: str, *, node: Optional[NodeRuntime] = None,
                          policy: str = "fork", lazy: bool = True,
                          prefetch: int = 1):
         """Start (or reuse) a container for `func` without executing it.
         policy: fork | cache | coldstart."""
-        node = node or self.pick_node()
+        node = node or self.pick_node(func=func)
         inst = None
         if policy == "cache":
             pool = self.cached.get(func, [])
@@ -117,10 +207,14 @@ class Coordinator:
                     inst = pool.pop(i)[0]
                     break
         if inst is None and policy == "fork":
-            handle = self.seed_store.get(func)
-            if handle is not None and self._seed_fresh(handle):
-                inst = handle.resume_on(node, ForkPolicy(lazy=lazy,
-                                                         prefetch=prefetch))
+            seed = self._fresh_seed(func)
+            if seed is not None:
+                inst = seed.resume_on(node, ForkPolicy(lazy=lazy,
+                                                       prefetch=prefetch))
+                if isinstance(seed, ShardedSeed):
+                    # a replica can die between the freshness check and the
+                    # fetch; the resume re-routes and records the victim
+                    self._count_lost(func, seed.drain_lost())
         if inst is None:
             inst = self.coldstart(func, node)
         return inst
@@ -146,34 +240,58 @@ class Coordinator:
             inst.free()
 
     def _pinned_as_seed(self, inst: ModelInstance) -> bool:
-        for handle in self.seed_store.values():
-            node = self.nodes.get(handle.parent_node)
-            entry = node.seeds.get(handle.handler_id) if node is not None else None
-            if entry is not None and entry.instance is inst:
-                return True
+        for seed in self.seed_store.values():
+            for handle in _seed_handles(seed):
+                node = self.nodes.get(handle.parent_node)
+                entry = node.seeds.get(handle.handler_id) \
+                    if node is not None else None
+                if entry is not None and entry.instance is inst:
+                    return True
         return False
 
     # -- lifecycle / GC -------------------------------------------------------
 
-    def _seed_fresh(self, handle: ForkHandle) -> bool:
+    def _seed_fresh(self, seed: Seed) -> bool:
         # alive: the node-side dangling-seed GC may have reclaimed the seed
         # (MAX_FUNCTION_LIFETIME) while the store still holds the handle —
-        # treat that as stale so invokes fall back to coldstart.
-        return (handle.parent_node in self.network.nodes
-                and handle.alive and not handle.expired)
+        # treat that as stale so invokes fall back to coldstart.  A sharded
+        # seed is fresh while ANY replica can serve.
+        return any(h.parent_node in self.network.nodes
+                   and h.alive and not h.expired
+                   for h in _seed_handles(seed))
 
-    def _live_handle(self, func: str) -> Optional[ForkHandle]:
-        """The store's handle for ``func`` iff its seed is still registered
-        at the parent; a handle reclaimed underneath the store is dropped
-        (and telemetered as "reclaimed")."""
-        handle = self.seed_store.get(func)
-        if handle is None:
+    def _fresh_seed(self, func: str) -> Optional[Seed]:
+        """The store's seed for ``func`` iff it can serve a fork right now.
+        A replica whose parent dropped out of the network is purged ON
+        SIGHT (not left for gc to eventually notice) and telemetered as
+        ``parent_lost``; a fully lost seed leaves the store immediately."""
+        seed = self.seed_store.get(func)
+        if seed is None:
             return None
-        if not handle.alive:
+        if isinstance(seed, ShardedSeed):
+            seed.purge_lost(self.network.nodes)
+            self._count_lost(func, seed.drain_lost())
+            if seed.replicas == 0:
+                del self.seed_store[func]
+                return None
+        elif seed.parent_node not in self.network.nodes:
+            del self.seed_store[func]
+            self._lease_event(func, "parent_lost")
+            return None
+        return seed if self._seed_fresh(seed) else None
+
+    def _live_handle(self, func: str) -> Optional[Seed]:
+        """The store's seed for ``func`` iff it is still registered at (at
+        least one) parent; a seed reclaimed underneath the store is dropped
+        (and telemetered as "reclaimed")."""
+        seed = self.seed_store.get(func)
+        if seed is None:
+            return None
+        if not seed.alive:
             del self.seed_store[func]
             self._lease_event(func, "reclaimed")
             return None
-        return handle
+        return seed
 
     def renew_seed(self, func: str) -> None:
         handle = self._live_handle(func)
@@ -202,12 +320,28 @@ class Coordinator:
         ``lease`` (per-function renew/expiry/revocation counters) and
         ``lease_nodes`` (per-node parent-side counters)."""
         now = self.clock()
-        freed = {"seeds": 0, "cached": 0, "dangling": 0}
-        for func, handle in list(self.seed_store.items()):
-            if handle.expired or not handle.alive:
+        freed = {"seeds": 0, "cached": 0, "dangling": 0, "rereplicated": 0}
+        for func, seed in list(self.seed_store.items()):
+            if isinstance(seed, ShardedSeed):
+                seed.purge_lost(self.network.nodes)
+                self._count_lost(func, seed.drain_lost())
+                for h in list(seed.handles):
+                    if h.expired or not h.alive:
+                        self._lease_event(
+                            func, "expiries" if h.expired else "reclaimed")
+                        h.reclaim(free_instance=True)  # no-op if already gone
+                        seed.handles.remove(h)
+                if not seed.handles:
+                    del self.seed_store[func]
+                    freed["seeds"] += 1
+                else:
+                    # heal the shard set back to its target replica count
+                    freed["rereplicated"] += self._replicate(func, seed)
+                continue
+            if seed.expired or not seed.alive:
                 self._lease_event(
-                    func, "expiries" if handle.expired else "reclaimed")
-                handle.reclaim(free_instance=True)   # no-op if already gone
+                    func, "expiries" if seed.expired else "reclaimed")
+                seed.reclaim(free_instance=True)   # no-op if already gone
                 del self.seed_store[func]
                 freed["seeds"] += 1
         for func, pool in self.cached.items():

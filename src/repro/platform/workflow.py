@@ -84,7 +84,8 @@ def run_workflow(coord: Coordinator, wf: Workflow, inputs: dict, *,
         n_copies = fan_out.get(name, 1)
         outs = []
         for ci in range(n_copies):
-            node = coord.pick_node()
+            # route-aware: the scheduler sees the function's seed demand
+            node = coord.pick_node(func=wfunc.func)
             ctx = dict(inputs)
             inst = None
             if transfer == "fork" and ups:

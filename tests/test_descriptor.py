@@ -48,3 +48,47 @@ def test_descriptor_is_metadata_only(cluster, hello_cfg, hello_params):
     blob = nodes[0].seeds[handle.handler_id].blob
     assert len(blob) < inst.total_bytes() / 50, \
         f"descriptor {len(blob)}B not << state {inst.total_bytes()}B"
+
+
+def test_sharded_routed_descriptor_stays_kb_sized():
+    """Size regression for the placement plane: a GB-scale, sharded,
+    route-annotated descriptor (per-VMA owner chains + transports + the
+    route map) must keep the paper's metadata-only property — KBs of
+    descriptor for GBs of instance state."""
+    from repro.core.pagetable import VMA
+
+    parents = [f"parent{i}" for i in range(4)]
+    transports = ["dct", "tpu_ici", "shared_fs", None]
+    vmas, routes, total = [], {}, 0
+    # 8 x 1 GiB tensors at 4 MiB pages: 256-entry page tables each
+    for i in range(8):
+        shape = (256, 1024, 1024)                       # 1 GiB float32
+        v = VMA.new_local(f"layers/{i}/w", shape, "float32",
+                          np.arange(256, dtype=np.int32))
+        v.ancestry = [parents[i % 4], "origin"]         # sharded owner chain
+        v.transport = transports[i % 4]
+        v.dc_keys = {1: 1000 + i, 2: 2000 + i}
+        vmas.append(v)
+        routes[v.name] = {"owner": v.ancestry[0], "transport": v.transport}
+        total += v.nbytes()
+    d = Descriptor(
+        arch="gb-scale", kind="weights", parent_node="parent0", handler_id=1,
+        ancestry=["origin"],
+        leaf_paths=[["layers", i, "w"] for i in range(8)],
+        vmas=[v.table_dict() for v in vmas],
+        registers={"step": 0},
+        extra={"prepared_keys": {v.name: 3000 + i
+                                 for i, v in enumerate(vmas)},
+               "leaf_names": [v.name for v in vmas]},
+        routes=routes,
+    )
+    blob = d.to_bytes()
+    assert total >= 8 * 2**30
+    assert len(blob) < 64 * 1024, \
+        f"route-annotated descriptor ballooned to {len(blob)}B"
+    assert len(blob) < total / 100_000, \
+        f"descriptor {len(blob)}B not metadata-sized vs {total}B state"
+    e = Descriptor.from_bytes(blob)
+    assert e.routes["layers/0/w"]["owner"] == "parent0"
+    assert e.vma_objects()[1].transport == "tpu_ici"
+    assert e.vma_objects()[1].ancestry == ["parent1", "origin"]

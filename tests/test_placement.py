@@ -1,0 +1,444 @@
+"""Placement plane (repro.placement): sharded multi-parent seeds, per-VMA
+route plans, transport-/load-aware scheduling, and the coordinator
+lifecycle fixes riding on them (parent-lost purge + telemetry,
+exclusion-stable fallback order, shard re-replication)."""
+import types
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.instance import ModelInstance
+from repro.core.pagetable import VMA
+from repro.fork import ForkPolicy
+from repro.net import Network
+from repro.placement import (HotColdPolicy, RoundRobinScheduler, RoutePlan,
+                             ShardedSeed, SpreadPolicy,
+                             TransportAwareScheduler, VMAInfo, VMARoute,
+                             route_demand)
+from repro.platform.coordinator import Coordinator, FunctionDef
+from repro.platform.node import NodeRuntime
+
+from conftest import FakeClock
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def big_platform(hello_cfg, hello_params):
+    """An 8-node coordinator cluster (enough for S=3 seeds + children)."""
+    net = Network()
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(8)]
+    coord = Coordinator(net, nodes, clock=clock)
+
+    def behavior(inst, ctx):
+        inst.ensure_tensor(inst.leaf_names[0])
+        return {"ok": True}
+
+    coord.register_function(FunctionDef(
+        name="f", arch=hello_cfg.name,
+        make_params=lambda: hello_params, behavior=behavior))
+    return net, nodes, coord, clock
+
+
+def _fake_nodes(*ids):
+    return {i: types.SimpleNamespace(node_id=i, alive=True) for i in ids}
+
+
+# ---------------------------------------------------------------------------
+# schedulers (satellite: exclusion-stable, drift-free round robin)
+# ---------------------------------------------------------------------------
+
+
+def test_round_robin_rotates_deterministically():
+    sched = RoundRobinScheduler()
+    nodes = _fake_nodes("a", "b", "c")
+    got = [sched.pick(nodes).node_id for _ in range(6)]
+    assert got == ["a", "b", "c", "a", "b", "c"]
+
+
+def test_round_robin_exclusion_does_not_drift():
+    """The old `self._rr % len(filtered)` cursor re-indexed the filtered
+    list, so an exclusion shifted every later pick and could hand out the
+    same node back-to-back.  The scheduler skips excluded nodes IN PLACE."""
+    sched = RoundRobinScheduler()
+    nodes = _fake_nodes("a", "b", "c")
+    assert sched.pick(nodes).node_id == "a"
+    # old bug: cursor=1 over filtered [b, c] -> "c"; then "c" again
+    assert sched.pick(nodes, exclude={"b"}).node_id == "c"
+    assert sched.pick(nodes).node_id == "a"
+    seq = [sched.pick(nodes, exclude={"b"}).node_id for _ in range(4)]
+    assert seq == ["c", "a", "c", "a"], "exclusion must not skew rotation"
+
+
+def test_round_robin_dead_node_skipped_in_place():
+    sched = RoundRobinScheduler()
+    nodes = _fake_nodes("a", "b", "c")
+    nodes["b"].alive = False
+    assert [sched.pick(nodes).node_id for _ in range(4)] == \
+        ["a", "c", "a", "c"]
+    nodes["b"].alive = True
+    got = [sched.pick(nodes).node_id for _ in range(3)]
+    assert set(got) == {"a", "b", "c"}, "revived node rejoins the rotation"
+
+
+def test_round_robin_no_eligible_raises():
+    sched = RoundRobinScheduler()
+    with pytest.raises(RuntimeError, match="no live nodes"):
+        sched.pick(_fake_nodes())
+    nodes = _fake_nodes("a")
+    with pytest.raises(RuntimeError, match="no live nodes"):
+        sched.pick(nodes, exclude={"a"})
+
+
+def test_transport_aware_prefers_paid_connection():
+    """RC's 4 ms QP connect amortizes: a candidate that already holds the
+    (child, owner) RC connection scores 0 setup and wins."""
+    net = Network()
+    for i in range(4):
+        NodeRuntime(f"node{i}", net, page_elems=64)
+    sched = TransportAwareScheduler(net)
+    net.note_connection("rc", "node2", "node0")
+    demand = route_demand(["node0"], ["rc"])
+    nodes = {i: net.nodes[i] for i in net.nodes}
+    assert sched.pick(nodes, exclude={"node0"}, demand=demand).node_id \
+        == "node2"
+
+
+def test_transport_aware_avoids_backlogged_channel():
+    net = Network()
+    for i in range(3):
+        NodeRuntime(f"node{i}", net, page_elems=64)
+    sched = TransportAwareScheduler(net)
+    net.set_channel_busy("node1", "node0", 5.0)     # 5 s of queued transfer
+    demand = route_demand(["node0"], [None])
+    nodes = {i: net.nodes[i] for i in net.nodes}
+    assert sched.pick(nodes, exclude={"node0"}, demand=demand).node_id \
+        == "node2"
+
+
+def test_transport_aware_falls_back_to_round_robin():
+    net = Network()
+    for i in range(3):
+        NodeRuntime(f"node{i}", net, page_elems=64)
+    sched = TransportAwareScheduler(net)
+    nodes = {i: net.nodes[i] for i in net.nodes}
+    got = [sched.pick(nodes).node_id for _ in range(4)]
+    assert got == ["node0", "node1", "node2", "node0"]
+
+
+# ---------------------------------------------------------------------------
+# placement policies / route plans
+# ---------------------------------------------------------------------------
+
+
+def test_spread_policy_balances_bytes():
+    vmas = [VMAInfo(f"v{i}", nb) for i, nb in
+            enumerate([8000, 6000, 4000, 2000, 2000, 2000])]
+    plan = SpreadPolicy().plan(vmas, ["p0", "p1"])
+    load = {"p0": 0, "p1": 0}
+    for v in vmas:
+        load[plan[v.name].owner] += v.nbytes
+    total = sum(load.values())
+    assert max(load.values()) <= 0.6 * total, f"unbalanced: {load}"
+    # deterministic: same inputs, same plan
+    again = SpreadPolicy().plan(vmas, ["p0", "p1"])
+    assert plan.to_dict() == again.to_dict()
+
+
+def test_spread_policy_offset_rotates_assignment():
+    vmas = [VMAInfo("a", 100), VMAInfo("b", 100)]
+    p0 = SpreadPolicy().plan(vmas, ["p0", "p1"], offset=0)
+    p1 = SpreadPolicy().plan(vmas, ["p0", "p1"], offset=1)
+    assert p0["a"].owner != p1["a"].owner, "offset must rotate ties"
+
+
+def test_hot_cold_policy_classifies_and_routes():
+    pol = HotColdPolicy(hot="dct", cold="shared_fs")
+    assert pol.is_cold("opt/m") and pol.is_cold("layers/0/adam/v")
+    assert not pol.is_cold("wopt") and not pol.is_cold("tok")
+    vmas = [VMAInfo("tok", 100), VMAInfo("opt/m", 100)]
+    plan = pol.plan(vmas, ["p0"])
+    assert plan["tok"].transport == "dct"
+    assert plan["opt/m"].transport == "shared_fs"
+    assert pol.transport_hints() == ["dct", "shared_fs"]
+
+
+def test_policy_rejects_unknown_transport():
+    with pytest.raises(ValueError, match="unknown transport"):
+        SpreadPolicy(transport="bogus")
+    with pytest.raises(ValueError, match="unknown transport"):
+        HotColdPolicy(hot="bogus")
+
+
+def test_route_plan_roundtrip_and_reroute():
+    plan = RoutePlan(routes={"a": VMARoute("p0", "dct"),
+                             "b": VMARoute("p1")})
+    back = RoutePlan.from_dict(plan.to_dict())
+    assert back["a"] == VMARoute("p0", "dct") and back["b"].transport is None
+    assert plan.owners() == ["p0", "p1"]
+    fallback = RoutePlan(routes={"a": VMARoute("p1", "dct"),
+                                 "b": VMARoute("p1")})
+    plan.reroute("p0", fallback)
+    assert plan["a"].owner == "p1"
+
+
+# ---------------------------------------------------------------------------
+# VMA / descriptor route fields
+# ---------------------------------------------------------------------------
+
+
+def test_vma_route_fields_roundtrip():
+    vma = VMA.new_local("w", (64,), "float32", np.arange(1, dtype=np.int32))
+    vma.ancestry = ["p0", "origin"]
+    vma.transport = "tpu_ici"
+    back = VMA.from_table_dict(vma.table_dict())
+    assert back.ancestry == ["p0", "origin"]
+    assert back.transport == "tpu_ici"
+    assert back.owner_at(2, ()) == "origin"
+    # legacy table dicts (no route keys) still deserialize
+    legacy = {k: v for k, v in vma.table_dict().items()
+              if k not in ("ancestry", "transport")}
+    old = VMA.from_table_dict(legacy)
+    assert old.ancestry == [] and old.transport is None
+    assert old.owner_at(1, ["inst-parent"]) == "inst-parent"
+
+
+def test_child_view_builds_owner_chain():
+    vma = VMA.new_local("w", (64,), "float32", np.arange(1, dtype=np.int32))
+    child = vma.child_view(7, parent_node="p0", default_ancestry=["origin"])
+    # parent's pages were all local, so its (empty) chain defers to the
+    # descriptor-level default for the deeper hops
+    assert child.ancestry == ["p0", "origin"]
+    grand = child.child_view(8, parent_node="p1",
+                             default_ancestry=["ignored"])
+    assert grand.ancestry == ["p1"] + child.ancestry
+    assert grand.transport == child.transport
+
+
+def test_prepared_descriptor_carries_routes(cluster, hello_cfg, hello_params):
+    from repro.core.descriptor import Descriptor
+    net, nodes = cluster
+    inst = ModelInstance.create(nodes[0], hello_cfg.name, hello_params)
+    inst.aspace[inst.leaf_names[0]].transport = "shared_fs"
+    handle = nodes[0].prepare_fork(inst)
+    desc = Descriptor.from_bytes(nodes[0].seeds[handle.handler_id].blob)
+    route = desc.route_for(inst.leaf_names[0])
+    assert route["owner"] == "node0" and route["transport"] == "shared_fs"
+    # unannotated VMAs fall back to the implicit single-parent route
+    assert desc.route_for("no-such-vma")["owner"] == "node0"
+
+
+# ---------------------------------------------------------------------------
+# sharded seeds
+# ---------------------------------------------------------------------------
+
+
+def test_deploy_sharded_seed(big_platform):
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0], replicas=3)
+    assert isinstance(seed, ShardedSeed) and seed.replicas == 3
+    assert len(set(seed.parent_nodes)) == 3, "replicas must span nodes"
+    assert coord.seed_store["f"] is seed
+    assert all(h.alive and not h.expired for h in seed.handles)
+    # every replica holds a fully materialized copy
+    for h in seed.handles[1:]:
+        entry = coord.nodes[h.parent_node].seeds[h.handler_id]
+        assert entry.instance.resident_fraction() == 1.0
+
+
+def test_unsharded_deploy_still_returns_plain_handle(big_platform):
+    from repro.fork import ForkHandle
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0])
+    assert isinstance(seed, ForkHandle)
+
+
+def test_sharded_resume_routes_vmas_across_replicas(big_platform,
+                                                    hello_params):
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0], replicas=3)
+    net.reset_meter()
+    child = seed.resume_on(nodes[5])
+    owners = {vma.ancestry[0] for vma in child.aspace.values()}
+    assert owners <= set(seed.parent_nodes)
+    assert len(owners) > 1, "VMAs must spread across the replica set"
+    got = child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the bytes actually moved from more than one parent NIC
+    busy = [net.node_busy(p) for p in owners]
+    assert sum(b > 0 for b in busy) > 1
+
+
+def test_sharded_fan_out_rotates_primaries(big_platform):
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    children = seed.fan_out([nodes[4], nodes[5], nodes[6], nodes[7]])
+    assert len(children) == 4
+    assert len(seed.serve_counts) == 2, "both replicas must serve VMAs"
+
+
+def test_sharded_seed_lease_surface(big_platform):
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    assert seed.alive and not seed.expired
+    assert seed.lease_deadline == min(h.lease_deadline for h in seed.handles)
+    seed.renew()
+    seed.revoke()
+    assert all(h.generation == 1 for h in seed.handles)
+    child = seed.resume_on(nodes[5])            # fresh generation serves
+    assert child.ancestry
+    seed.reclaim(free_instance=False)
+    assert not seed.alive
+
+
+# ---------------------------------------------------------------------------
+# degradation: crash a replica mid fan-out (satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_shard_degradation_reroute_and_rereplicate(big_platform):
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0], replicas=3)
+    parents = list(seed.parent_nodes)
+
+    out1, c1 = coord.invoke("f", node=nodes[5], policy="fork")
+    assert out1["ok"] and c1.ancestry
+
+    victim = parents[1]
+    coord.nodes[victim].crash()
+
+    # remaining shards keep serving: the resume purges the lost replica
+    # and routes every VMA over the survivors
+    out2, c2 = coord.invoke("f", node=nodes[6], policy="fork")
+    assert out2["ok"] and c2.ancestry
+    owners = {vma.ancestry[0] for vma in c2.aspace.values()}
+    assert victim not in owners
+    assert owners <= set(seed.parent_nodes)
+    assert seed.replicas == 2
+
+    # the loss is telemetered...
+    assert coord.lease_telemetry["f"]["parent_lost"] == 1
+
+    # ...and gc re-replicates back to the target on a spare node
+    freed = coord.gc()
+    assert freed["rereplicated"] == 1
+    assert seed.replicas == 3 and victim not in seed.parent_nodes
+    assert coord.lease_telemetry["f"]["rereplicated"] == 1
+    out3, c3 = coord.invoke("f", node=nodes[7], policy="fork")
+    assert out3["ok"] and c3.ancestry
+
+
+def test_fully_lost_sharded_seed_falls_back_to_coldstart(big_platform):
+    net, nodes, coord, clock = big_platform
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    for p in list(seed.parent_nodes):
+        coord.nodes[p].crash()
+    live = next(n for n in nodes if n.alive)
+    out, inst = coord.invoke("f", node=live, policy="fork")
+    assert out["ok"]
+    assert coord.lease_telemetry["f"]["parent_lost"] == 2
+    # coldstart re-seeded the platform on a live node
+    assert coord.seed_store["f"].parent_node == live.node_id
+
+
+def test_plain_seed_parent_loss_purged_on_sight(platform):
+    """Satellite fix: a plain handle whose parent dropped out of
+    network.nodes is purged (and telemetered) the moment it is seen, not
+    left for gc to eventually notice."""
+    net, nodes, coord, clock = platform
+    coord.invoke("f")
+    handle = coord.seed_store["f"]
+    coord.nodes[handle.parent_node].crash()
+    assert coord._fresh_seed("f") is None
+    assert "f" not in coord.seed_store
+    assert coord.lease_telemetry["f"]["parent_lost"] == 1
+    # and the invoke path still serves via coldstart re-seeding
+    live = next(n for n in nodes if n.alive)
+    out, inst = coord.invoke("f", node=live, policy="fork")
+    assert out["ok"]
+    assert coord.seed_store["f"].parent_node != handle.parent_node
+
+
+# ---------------------------------------------------------------------------
+# per-VMA transport routing
+# ---------------------------------------------------------------------------
+
+
+def _hot_cold_parent(node, cfg, params):
+    inst = ModelInstance.create(node, cfg.name, params, kind="weights")
+    inst.add_tensor("opt/m", np.zeros(4096, np.float32))
+    return inst
+
+
+def test_single_parent_placement_routes_transports(cluster, hello_cfg,
+                                                   hello_params):
+    net, nodes = cluster
+    parent = _hot_cold_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(),
+                             placement=HotColdPolicy(hot="dct",
+                                                     cold="shared_fs"))
+    assert child.aspace["opt/m"].transport == "shared_fs"
+    assert child.aspace[child.leaf_names[0]].transport == "dct"
+    net.reset_meter()
+    child.ensure_tensor("opt/m")
+    assert net.meter["shared_fs.bytes"] > 0 and net.meter["dct.bytes"] == 0
+    child.ensure_tensor(child.leaf_names[0])
+    assert net.meter["dct.bytes"] > 0
+
+
+def test_routed_transport_sticks_across_generations(cluster, hello_cfg,
+                                                    hello_params):
+    """A VMA pinned to a fabric keeps it when the child is re-prepared as
+    a seed (fork trees): the route rides the descriptor."""
+    net, nodes = cluster
+    parent = _hot_cold_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(),
+                             placement=HotColdPolicy(cold="shared_fs"))
+    reseed = nodes[1].prepare_fork(child)
+    grand = reseed.resume_on(nodes[2])
+    assert grand.aspace["opt/m"].transport == "shared_fs"
+    net.reset_meter()
+    grand.ensure_tensor("opt/m")
+    assert net.meter["shared_fs.bytes"] > 0
+
+
+def test_async_prefetch_honors_vma_route(cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = _hot_cold_parent(nodes[0], hello_cfg, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(async_prefetch=4),
+                             placement=HotColdPolicy(cold="shared_fs"))
+    net.reset_meter()
+    child.prefetch_engine.issue("opt/m", np.arange(4))
+    assert net.meter["shared_fs.async_ops"] > 0
+    assert net.meter["dct.bytes"] == 0
+    child.prefetch_engine.drain("opt/m")
+
+
+# ---------------------------------------------------------------------------
+# node-busy ledger (parent NIC accounting behind the fan-out benchmark)
+# ---------------------------------------------------------------------------
+
+
+def test_node_busy_ledger_charges_both_endpoints(cluster, hello_cfg,
+                                                 hello_params):
+    net, nodes = cluster
+    parent = ModelInstance.create(nodes[0], hello_cfg.name, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1])
+    net.reset_meter()
+    child.ensure_all()
+    assert net.node_busy("node0") > 0
+    assert net.node_busy("node0") == pytest.approx(net.node_busy("node1"))
+    assert net.node_busy("node3") == 0.0
+    net.reset_meter()
+    assert net.node_busy("node0") == 0.0
