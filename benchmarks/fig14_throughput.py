@@ -1,21 +1,34 @@
 """Figure 14 (extended): peak fork throughput — bottleneck analysis plus
-the placement plane's sharded fan-out and per-VMA routing sweeps.
+the placement plane's sharded fan-out, link-contention, hot-spot reroute
+and per-VMA routing sweeps.
 
 * ``fig14.mitosis.*`` — the paper's bottleneck model: what limits a single
-  seed (parent NIC bandwidth vs RPC handler capacity).
+  seed (parent NIC bandwidth vs RPC handler capacity), now with the
+  metered ``channel_wait_us`` stall column.
 * ``fig14.sharded.s{S}`` — one logical seed backed by S parent replicas
   (``Coordinator.deploy_seed(replicas=S)``); K children route their VMAs
   across the replica set, so fan-out makespan is the *busiest parent's*
   NIC time (``Network.node_busy``) and children/sec scales with S at equal
   bytes moved.
+* ``fig14.contention.s{S}.k{K}`` — the per-node link CLOCK
+  (``NetModel.node_links``): K concurrent children gather async from the
+  seed, and the makespan is the last busy parent link stamp in sim time
+  itself.  A single parent's completion grows with K; S=4 sharding
+  restores children/sec.
+* ``fig14.reroute.*`` — load-triggered ``RoutePlan.reroute``: under a
+  pre-heated parent NIC, a child with ``ForkPolicy(reroute_backlog=...)``
+  diverts to the cooler replica and beats the static plan at byte-identical
+  traffic.
 * ``fig14.route.*`` — per-VMA transport routing: a mixed HotCold plan (hot
   weights over ``dct``, cold optimizer state over ``shared_fs``) against
   uniform single-transport baselines at equal working set.
 
 ``run(write_json=path)`` (and ``--smoke``) writes the sweeps to
 ``BENCH_fanout.json``; ``--smoke`` exits non-zero unless children/sec
-strictly increases S=1 -> 2 -> 4 at equal page bytes AND the mixed route
-plan beats the uniform ``shared_fs`` baseline on sim time.
+strictly increases S=1 -> 2 -> 4 at equal page bytes, the single-parent
+contention makespan grows with K while S=4 restores children/sec, the
+reroute row beats the static-route row at equal bytes, AND the mixed
+route plan beats the uniform ``shared_fs`` baseline on sim time.
 """
 from __future__ import annotations
 
@@ -27,6 +40,7 @@ import numpy as np
 
 from benchmarks.common import (FUNCTIONS, deploy_parent, make_cluster,
                                params_for, timed, touch_fraction)
+from repro.core.prefetch import issue_fan_in
 from repro.fork import ForkPolicy
 from repro.placement import HotColdPolicy, SpreadPolicy
 from repro.platform.coordinator import Coordinator, FunctionDef
@@ -38,6 +52,11 @@ SHARD_FN = "json"       # ~18 MB, 11 VMAs: spreads well, stays smoke-fast
 SHARD_K = 8             # children per sharded fan-out
 SHARD_S = (1, 2, 4)     # parent replica counts swept
 COLD_FRAC_NAME = "opt"  # cold state prefix the HotCold policy matches
+
+CONTENTION_K = (2, 4, 8)   # concurrent children per async fan-in
+CONTENTION_S = (1, 4)      # one hot parent vs a sharded replica set
+REROUTE_JUNK_PAGES = 8192  # pre-heat wire time on the hot parent's link
+REROUTE_BACKLOG_S = 1e-4   # Router threshold for the reroute row
 
 
 def run_bottleneck():
@@ -64,6 +83,7 @@ def run_bottleneck():
             mb_per_fork=round(bytes_per_fork / 2**20, 1),
             nic_bound_forks_per_s=int(nic_forks_per_s),
             rpc_bound_forks_per_s=int(rpc_cap),
+            channel_wait_us=int(net.meter["channel_wait_s"] * 1e6),
             bottleneck="nic" if nic_forks_per_s < rpc_cap else "rpc"))
     return rows
 
@@ -116,6 +136,63 @@ def run_sharded():
     return rows
 
 
+def run_contention():
+    """The link clock at work: K concurrent children async-gather their
+    whole working set; makespan = last busy parent link stamp in sim_time.
+    One parent's completion grows with K; S=4 restores children/sec."""
+    rows = []
+    policy = ForkPolicy(async_prefetch=4096, descriptor_fetch="rpc")
+    for s in CONTENTION_S:
+        for k in CONTENTION_K:
+            net, nodes, seed = _sharded_coordinator(s)
+            parents = [seed.parent_node] if s == 1 \
+                else list(seed.parent_nodes)
+            children = [seed.resume_on(nodes[s + i], policy)
+                        for i in range(k)]
+            t0, b0 = net.sim_time, net.meter["dct.bytes"]
+            issue_fan_in(children)
+            makespan = max(net.link_busy_until(p) for p in parents) - t0
+            page_bytes = net.meter["dct.bytes"] - b0
+            rows.append(dict(
+                name=f"fig14.contention.s{s}.k{k}",
+                replicas=s, children=k,
+                page_bytes=int(page_bytes),
+                bytes_per_child=int(page_bytes / k),
+                makespan_us=int(makespan * 1e6),
+                children_per_s=int(k / makespan)))
+    return rows
+
+
+def _heat_link(net, node, pages):
+    """Backlog ``node``'s NIC organically: one large async read from a
+    bystander rides the real charge path and occupies the link."""
+    frames = node.pool.alloc("float32", pages)
+    key = net.create_dc_target(node.node_id)
+    net.read_pages("fig14-bystander", node.node_id, "float32", frames, key,
+                   async_read=True)
+
+
+def run_reroute():
+    """Load-triggered RoutePlan.reroute vs the static plan under a hot
+    parent NIC, at byte-identical traffic."""
+    rows = {}
+    for label, backlog in (("static", None), ("reroute", REROUTE_BACKLOG_S)):
+        net, nodes, seed = _sharded_coordinator(2)
+        child = seed.resume_on(nodes[2], ForkPolicy(
+            descriptor_fetch="rpc", reroute_backlog=backlog))
+        _heat_link(net, nodes[0], REROUTE_JUNK_PAGES)
+        t0, b0 = net.sim_time, net.meter["dct.bytes"]
+        t = timed(net, touch_fraction, child, 1.0, 0, 0.0, True)
+        rows[label] = dict(
+            name=f"fig14.reroute.{label}",
+            us_per_call=int(t.wall_s * 1e6),
+            sim_us=int(t.sim_s * 1e6),
+            page_bytes=int(net.meter["dct.bytes"] - b0),
+            channel_wait_us=int(net.meter["channel_wait_s"] * 1e6),
+            reroutes=int(net.meter["reroutes"]))
+    return rows
+
+
 def _routed_parent(node):
     """A seed with hot weights AND cold optimizer state (same byte count
     as the weights), so hot/cold routing has something to split."""
@@ -157,13 +234,20 @@ def run_routing():
 
 
 def run_sweeps(write_json=None):
-    """Sharded + routing sweeps; returns (rows, summary)."""
+    """Sharded + contention + reroute + routing sweeps;
+    returns (rows, summary)."""
     sharded = run_sharded()
+    contention = run_contention()
+    reroute = run_reroute()
     routed = run_routing()
-    rows = sharded + list(routed.values())
+    rows = sharded + contention + list(reroute.values()) \
+        + list(routed.values())
     by_s = {r["replicas"]: r for r in sharded}
+    by_sk = {(r["replicas"], r["children"]): r for r in contention}
+    single = [by_sk[(1, k)] for k in CONTENTION_K]
+    kmax = CONTENTION_K[-1]
     summary = {
-        "schema": "fanout-bench/v1",
+        "schema": "fanout-bench/v2",
         "rows": rows,
         "sharded": {
             "children": SHARD_K,
@@ -174,6 +258,30 @@ def run_sweeps(write_json=None):
             "scaling": all(
                 by_s[a]["children_per_s"] < by_s[b]["children_per_s"]
                 for a, b in zip(SHARD_S, SHARD_S[1:])),
+        },
+        "contention": {
+            "makespan_us": {f"s{r['replicas']}.k{r['children']}":
+                            r["makespan_us"] for r in contention},
+            # one parent NIC: completion grows with concurrent children
+            "single_parent_grows": all(
+                a["makespan_us"] < b["makespan_us"]
+                for a, b in zip(single, single[1:])),
+            # S=4 replicas: children/sec comes back at the full fan-in
+            "sharding_restores": by_sk[(4, kmax)]["children_per_s"]
+            > by_sk[(1, kmax)]["children_per_s"],
+            "equal_bytes_per_child": len({r["bytes_per_child"]
+                                          for r in contention}) == 1,
+        },
+        "reroute": {
+            "static_sim_us": reroute["static"]["sim_us"],
+            "reroute_sim_us": reroute["reroute"]["sim_us"],
+            "reroutes": reroute["reroute"]["reroutes"],
+            "equal_bytes": reroute["reroute"]["page_bytes"]
+            == reroute["static"]["page_bytes"],
+            "beats_static": reroute["reroute"]["sim_us"]
+            < reroute["static"]["sim_us"],
+            # the static plan's stall is metered, not absorbed
+            "static_channel_wait_us": reroute["static"]["channel_wait_us"],
         },
         "routing": {
             "mixed_sim_us": routed["mixed"]["sim_us"],
@@ -220,12 +328,21 @@ def main() -> int:
     print(f"wrote {args.json}")
     if args.smoke:
         sh, rt = s["sharded"], s["routing"]
+        ct, rr = s["contention"], s["reroute"]
         ok = sh["scaling"] and sh["equal_bytes"] \
+            and ct["single_parent_grows"] and ct["sharding_restores"] \
+            and ct["equal_bytes_per_child"] \
+            and rr["beats_static"] and rr["equal_bytes"] \
+            and rr["reroutes"] >= 1 \
             and rt["mixed_beats_uniform"] and rt["equal_bytes"]
         print(f"smoke: children/s {sh['children_per_s']} "
-              f"(equal_bytes={sh['equal_bytes']}), mixed "
-              f"{rt['mixed_sim_us']}us vs uniform {rt['uniform_fs_sim_us']}us"
-              f" -> {'OK' if ok else 'FAIL'}")
+              f"(equal_bytes={sh['equal_bytes']}), contention "
+              f"{ct['makespan_us']} (grows={ct['single_parent_grows']}, "
+              f"restored={ct['sharding_restores']}), reroute "
+              f"{rr['reroute_sim_us']}us vs static {rr['static_sim_us']}us "
+              f"({rr['reroutes']} reroutes, equal_bytes={rr['equal_bytes']}),"
+              f" mixed {rt['mixed_sim_us']}us vs uniform "
+              f"{rt['uniform_fs_sim_us']}us -> {'OK' if ok else 'FAIL'}")
         return 0 if ok else 1
     return 0
 

@@ -50,6 +50,10 @@ class ModelInstance:
         self.default_prefetch = 0
         # ForkPolicy.async_prefetch: background lookahead engine (None = off)
         self.prefetch_engine: Optional[PrefetchEngine] = None
+        # repro.placement.Router: dynamic hot-spot re-routing, attached by
+        # the sharded resume when ForkPolicy.reroute_backlog is set (None =
+        # static routes).  Consulted by _hop_groups before hop-1 reads.
+        self.router = None
         # True once this instance's frame table traveled in a descriptor
         # (prepare_fork): only then can other nodes hold cache entries
         # keyed on our frames, so only then must free() broadcast
@@ -138,6 +142,11 @@ class ModelInstance:
                 # local frames that lost PRESENT (swapped out): fallback path
                 self._fallback_fetch(vma, self.node.node_id, plist)
                 continue
+            if hop == 1 and self.router is not None:
+                # hot-spot (or lost-owner) re-routing: the Router may move
+                # this VMA's plan to a cooler sibling replica and re-stamp
+                # its frames/key/ancestry before we resolve the owner
+                self.router.sync(vma)
             owner = vma.owner_at(int(hop), self.ancestry)
             key = vma.dc_keys.get(int(hop), -1)
             remote_frames = vma.frames[plist]

@@ -202,3 +202,36 @@ class PrefetchEngine:
             self.inst.stats["prefetch_wasted"] += sum(
                 len(e.pages) for e in lst)
         self._pending.clear()
+
+
+def issue_fan_in(children) -> int:
+    """Put every child's missing working set in flight as K *concurrent*
+    children would: round-robin across the children, each child's
+    per-owner VMA groups rotated by its index.
+
+    The link clock (``NetModel.node_links``) reserves lanes FCFS in issue
+    order, so child-major sequential issuing — child 0's entire set, then
+    child 1's — would stamp one child's reads onto every parent link
+    before the next child exists, serializing the whole fleet even when S
+    replicas could serve in parallel.  Interleaving the issue order is
+    what a real concurrent fan-out looks like to the fabric; the benchmark
+    and property-test fan-ins both drive it through here.  Children must
+    have a PrefetchEngine attached.  Returns total pages issued."""
+    plans = []
+    for i, child in enumerate(children):
+        by_owner: Dict[str, list] = {}
+        for name in child.leaf_names:
+            vma = child.aspace[name]
+            owner = vma.ancestry[0] if vma.ancestry else child.ancestry[0]
+            by_owner.setdefault(owner, []).append(name)
+        owners = sorted(by_owner)
+        r = i % len(owners)
+        plans.append((child, [by_owner[o] for o in owners[r:] + owners[:r]]))
+    issued = 0
+    for rnd in range(max((len(g) for _, g in plans), default=0)):
+        for child, groups in plans:
+            if rnd < len(groups):
+                for name in groups[rnd]:
+                    issued += child.prefetch_engine.issue(
+                        name, np.arange(child.aspace[name].npages))
+    return issued

@@ -35,6 +35,12 @@ class ForkPolicy:
     sibling_cache    : True/False toggles the child node's sibling page
                        cache for this and later forks; None keeps the
                        node's current setting
+    reroute_backlog  : seconds of planned-owner link backlog
+                       (``Network.link_backlog``) above which the child's
+                       Router re-routes VMAs to a cooler sibling replica
+                       holding the same bytes (``RoutePlan.reroute``);
+                       None = static routes only.  Takes effect on sharded
+                       (multi-replica) resumes, where alternates exist.
     """
 
     lazy: bool = True
@@ -43,6 +49,7 @@ class ForkPolicy:
     descriptor_fetch: Optional[str] = None
     page_fetch: Optional[str] = None
     sibling_cache: Optional[bool] = None
+    reroute_backlog: Optional[float] = None
 
     def __post_init__(self):
         self.validate()
@@ -68,6 +75,11 @@ class ForkPolicy:
         if self.sibling_cache is not None and not isinstance(self.sibling_cache, bool):
             raise ValueError(
                 f"sibling_cache must be None or a bool, got {self.sibling_cache!r}")
+        rb = self.reroute_backlog
+        if rb is not None and (isinstance(rb, bool)
+                               or not isinstance(rb, (int, float)) or rb < 0):
+            raise ValueError(
+                f"reroute_backlog must be None or seconds >= 0, got {rb!r}")
         return self
 
     @classmethod

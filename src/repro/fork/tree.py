@@ -65,27 +65,38 @@ class ForkTree:
 def build_fork_tree(root: "ForkHandle", nodes: Sequence,
                     policy: Optional[ForkPolicy] = None,
                     tree_degree: int = 8,
-                    child_lease: Optional[float] = None) -> ForkTree:
+                    child_lease: Optional[float] = None,
+                    root_quota: Optional[int] = None,
+                    promote=None) -> ForkTree:
     """Fork one child per entry of ``nodes`` (NodeRuntime targets; repeats
     allowed) through a degree-bounded tree rooted at ``root``.
 
     Children are promoted to servers lazily — a child only pays the
-    re-prepare cost when the frontier of existing seeds is exhausted."""
+    re-prepare cost when the frontier of existing seeds is exhausted.
+
+    ``root_quota`` is how many children the root itself serves before the
+    first promotion (default ``tree_degree``; a sharded root with S parent
+    NICs passes ``tree_degree * S``).  ``promote`` picks which pending
+    child to re-seed next: a callable from the promotable list of
+    (child instance, level) pairs to an index (default 0 = FIFO/BFS; the
+    placement-aware sharded fan-out promotes the least-loaded side)."""
     if tree_degree < 1:
         raise ValueError(f"tree_degree must be >= 1, got {tree_degree}")
     policy = ForkPolicy.coerce(policy)
     tree = ForkTree(root=root, degree=tree_degree)
-    servers = deque([[root, 0, 0]])     # [handle, children_served, level]
-    promotable = deque()                # (child instance, its level), BFS order
+    # [handle, children_served, level, serve quota]
+    servers = deque([[root, 0, 0, root_quota or tree_degree]])
+    promotable = []                     # (child instance, its level)
     try:
         for node in nodes:
-            while servers and servers[0][1] >= tree_degree:
+            while servers and servers[0][1] >= servers[0][3]:
                 servers.popleft()
             if not servers:
-                inst, level = promotable.popleft()
+                i = promote(promotable) if promote is not None else 0
+                inst, level = promotable.pop(i)
                 reseed = inst.node.prepare_fork(inst, lease=child_lease)
                 tree.seeds.append(reseed)
-                servers.append([reseed, 0, level])
+                servers.append([reseed, 0, level, tree_degree])
             server = servers[0]
             child = server[0].resume_on(node, policy)
             server[1] += 1

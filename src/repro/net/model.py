@@ -21,3 +21,9 @@ class NetModel:
     disk_bw: float = 2e9            # checkpoint "disk" (tmpfs-ish)
     ici_lat: float = 1e-6           # TPU ICI hop (static mesh, no QP setup)
     ici_bw: float = 50e9            # TPU ICI per link (for TPU-mode derivations)
+    node_links: int = 1             # wire transfers one node's NIC carries at
+                                    # full bandwidth; every transfer occupies
+                                    # one lane at EACH endpoint, so a K-way
+                                    # fan-in queues on the parent link in
+                                    # sim_time itself (<= 0 disables the link
+                                    # clock: ledger-only legacy accounting)

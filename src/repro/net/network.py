@@ -39,6 +39,11 @@ class Network:
         # transfers serialize against each other on their channel, not
         # against the sim clock
         self._channel_busy: Dict[tuple, float] = {}
+        # per-node link lanes (model.node_links busy-until stamps): a
+        # transfer holds one lane at EACH endpoint, so K children gathering
+        # from one parent queue on the parent NIC in sim_time itself — the
+        # contention the node_busy ledger only recorded passively
+        self._link_busy: Dict[str, list] = {}
         # per-node cumulative link occupancy (seconds of wire time on either
         # end of a transfer): the parent-NIC contention ledger that fan-out
         # benchmarks and the transport-aware scheduler read
@@ -118,6 +123,50 @@ class Network:
         """Seconds of queued transfer still ahead of ``sim_time`` on the
         (src, dst) channel — the load signal schedulers weigh."""
         return max(0.0, self.channel_busy(src, dst) - self.sim_time)
+
+    # -- per-node link capacity (the contention *clock*) -------------------------
+
+    def _lanes(self, node_id: str) -> list:
+        lanes = self._link_busy.get(node_id)
+        if lanes is None:
+            lanes = self._link_busy[node_id] = [0.0] * self.model.node_links
+        return lanes
+
+    def link_free(self, node_id: str) -> float:
+        """Absolute sim time at which ``node_id``'s NIC next has a free
+        lane.  With the link clock disabled (``node_links <= 0``) this is
+        always 0.0 — transfers serialize per channel only."""
+        if self.model.node_links <= 0:
+            return 0.0
+        lanes = self._link_busy.get(node_id)
+        return min(lanes) if lanes else 0.0
+
+    def link_busy_until(self, node_id: str) -> float:
+        """Absolute sim time at which ``node_id``'s NIC drains completely
+        (its LAST busy lane) — the fan-in makespan stamp.  Equal to
+        ``link_free`` at ``node_links=1``; with wider links the two
+        diverge (next-free lane vs last-busy lane).  0.0 while the link
+        clock is disabled."""
+        if self.model.node_links <= 0:
+            return 0.0
+        lanes = self._link_busy.get(node_id)
+        return max(lanes) if lanes else 0.0
+
+    def link_backlog(self, node_id: str) -> float:
+        """Seconds of queued wire time ahead of ``sim_time`` on ``node_id``'s
+        link — the hot-spot signal the Router and schedulers act on."""
+        return max(0.0, self.link_free(node_id) - self.sim_time)
+
+    def occupy_link(self, node_id: str, until: float) -> None:
+        """Hold ``node_id``'s earliest-free lane until ``until`` (absolute).
+        Transports call this for both endpoints of every transfer; a no-op
+        while the link clock is disabled."""
+        if self.model.node_links <= 0:
+            return
+        lanes = self._lanes(node_id)
+        i = min(range(len(lanes)), key=lanes.__getitem__)
+        if until > lanes[i]:
+            lanes[i] = until
 
     def account_node_busy(self, src: str, dst: str, seconds: float) -> None:
         """Charge ``seconds`` of wire occupancy to both endpoints' links.
@@ -205,4 +254,5 @@ class Network:
         self.meter.clear()
         self.sim_time = 0.0
         self._channel_busy.clear()   # busy stamps are absolute on the clock
+        self._link_busy.clear()
         self._node_busy.clear()

@@ -159,14 +159,18 @@ class Transport(abc.ABC):
         """
         node = self.net.require_node(dst)
         self.net.check_target(dst, dc_key)
-        self._setup(src, dst)
+        # an async read must not stall the child's clock on a cold
+        # connection: the setup cost is folded into the transfer's channel
+        # time instead of charged to sim_time (the sync path pays it up
+        # front, exactly as before)
+        setup = self._setup(src, dst, defer=async_read)
         pages = node.pool.read_pages(dtype, frames)
         nbytes = pages.size * pages.dtype.itemsize
         sges = contiguous_runs(frames)
         ops = max(1, math.ceil(sges / self.max_sge))
         self._charge("read", src, dst, nbytes,
                      ops * self.op_latency() + nbytes / self.bandwidth(),
-                     ops=ops, sges=sges, async_read=async_read)
+                     ops=ops, sges=sges, async_read=async_read, setup=setup)
         return pages
 
     def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int) -> None:
@@ -187,29 +191,45 @@ class Transport(abc.ABC):
 
     # -- metering -----------------------------------------------------------
 
-    def _setup(self, src: str, dst: str) -> None:
+    def _setup(self, src: str, dst: str, defer: bool = False) -> float:
+        """Pay the one-time (src, dst) connection cost if it is still owed.
+
+        A synchronous caller blocks the sim clock here (``defer=False``,
+        returns 0.0); an async caller gets the owed seconds back instead
+        (``defer=True``) and folds them into the transfer's channel time —
+        a cold connection must not stall the clock the async path exists
+        to keep moving.  Metering is identical either way."""
         if not self.connection_oriented:
-            return
+            return 0.0
         if not self.net.note_connection(self.name, src, dst):
-            return
+            return 0.0
         cost = self.setup_cost()
         meter = self.net.meter
         meter["conn_setups"] += 1
         meter[f"{self.name}.setups"] += 1
         meter[f"{self.name}.setup_s"] += cost
+        if defer:
+            return cost
         self.net.sim_time += cost
+        return 0.0
 
     def _charge(self, kind: str, src: str, dst: str, nbytes: int,
                 seconds: float, ops: int = 1, sges: Optional[int] = None,
-                async_read: bool = False) -> float:
-        """Meter one transfer and account its time on the (src, dst) channel.
+                async_read: bool = False, setup: float = 0.0) -> float:
+        """Meter one transfer and account its time on the (src, dst) channel
+        and both endpoints' links.
 
-        The transfer starts when both the caller (sim clock) and the channel
-        are free, and holds the channel until it completes.  A synchronous
-        charge blocks the sim clock to that completion; an async charge
-        leaves the clock alone — overlapped transfers serialize on their
-        channel, not on the simulation.  Returns the completion time."""
-        meter = self.net.meter
+        The transfer starts when the caller (sim clock), the channel AND a
+        link lane at each endpoint are all free — per-node link capacity
+        (``NetModel.node_links``) is a clocked resource, so a K-way fan-in
+        visibly queues on the parent NIC instead of overlapping for free.
+        A synchronous charge blocks the sim clock to the completion and
+        meters any stall behind a busy channel/link as ``channel_wait_s``;
+        an async charge leaves the clock alone.  ``setup`` is deferred
+        connection-setup time (async cold connections) served ahead of the
+        payload on the same channel.  Returns the completion time."""
+        net = self.net
+        meter = net.meter
         meter[f"{self.name}.bytes"] += nbytes
         meter[f"{self.name}.ops"] += ops
         if sges is not None:        # page reads only — blob/rpc have no SGEs
@@ -217,12 +237,21 @@ class Transport(abc.ABC):
         category = "rpc" if kind == "rpc" else self.legacy_meter
         meter[f"{category}_bytes"] += nbytes
         meter[f"{category}_ops"] += ops
-        start = max(self.net.sim_time, self.net.channel_busy(src, dst))
-        end = start + seconds
-        self.net.set_channel_busy(src, dst, end)
-        self.net.account_node_busy(src, dst, seconds)
+        start = max(net.sim_time, net.channel_busy(src, dst),
+                    net.link_free(src), net.link_free(dst))
+        end = start + setup + seconds
+        net.set_channel_busy(src, dst, end)
+        net.occupy_link(src, end)
+        if dst != src:
+            net.occupy_link(dst, end)
+        net.account_node_busy(src, dst, seconds)
         if async_read:
             meter[f"{self.name}.async_ops"] += ops
         else:
-            self.net.sim_time = end
+            if start > net.sim_time:
+                # the caller's stall behind a busy channel or link — fan-in
+                # queueing at a hot parent surfaces here, not just in
+                # async_wait_s (which only meters explicit wait_until)
+                meter["channel_wait_s"] += start - net.sim_time
+            net.sim_time = end
         return end

@@ -10,8 +10,9 @@ node scheduling (:class:`RoundRobinScheduler`,
 """
 from repro.placement.policy import (DEFAULT_COLD_PATTERN, HotColdPolicy,
                                     PlacementPolicy, SpreadPolicy)
-from repro.placement.route import (RoutePlan, VMAInfo, VMARoute,
-                                   descriptor_vma_infos, route_demand)
+from repro.placement.route import (ReplicaSource, Router, RoutePlan, VMAInfo,
+                                   VMARoute, descriptor_vma_infos,
+                                   route_demand)
 from repro.placement.scheduler import (RoundRobinScheduler,
                                        TransportAwareScheduler)
 from repro.placement.sharded import ShardedSeed
@@ -20,7 +21,9 @@ __all__ = [
     "DEFAULT_COLD_PATTERN",
     "HotColdPolicy",
     "PlacementPolicy",
+    "ReplicaSource",
     "RoundRobinScheduler",
+    "Router",
     "RoutePlan",
     "ShardedSeed",
     "SpreadPolicy",

@@ -96,14 +96,29 @@ class TransportAwareScheduler(RoundRobinScheduler):
 
     def score(self, node_id: str, demand: Sequence[tuple]) -> float:
         """Cost of placing a child on ``node_id`` for the given
-        (owner, transport) route demand: unpaid connection setups plus
-        the current backlog of each (child, owner) channel."""
-        cost = 0.0
+        (owner, transport) route demand: unpaid connection setups, the
+        current backlog of each (child, owner) channel, and the link
+        backlog of the candidate's own NIC.  (The OWNERS' link backlogs
+        are deliberately not charged: every candidate queues on them
+        equally, so they cannot discriminate a placement.)
+
+        Connection setup is paid once per (src, dst, transport) — repeated
+        demand entries for the same pair (a many-VMA plan routed to one
+        owner, or ``None`` next to the spelled-out default backend) are
+        deduped, and each (child, owner) channel is charged once, not once
+        per transport riding it."""
+        cost = self.net.link_backlog(node_id)
+        seen_pairs = set()
+        seen_owners = set()
         for owner, transport in demand:
             name = transport or self.net.transport
-            if not self.net.has_connection(name, node_id, owner):
-                cost += self._setup_estimate(name)
-            cost += self.net.channel_backlog(node_id, owner)
+            if (owner, name) not in seen_pairs:
+                seen_pairs.add((owner, name))
+                if not self.net.has_connection(name, node_id, owner):
+                    cost += self._setup_estimate(name)
+            if owner not in seen_owners:
+                seen_owners.add(owner)
+                cost += self.net.channel_backlog(node_id, owner)
         return cost
 
     def pick(self, nodes: Dict[str, object], exclude: Iterable[str] = (),

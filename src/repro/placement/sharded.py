@@ -28,11 +28,15 @@ import math
 from collections import Counter
 from typing import List, Optional, Sequence
 
+import numpy as np
+
 from repro.core.pagetable import VMA
 from repro.fork.handle import ForkHandle, instantiate_child
 from repro.fork.policy import ForkPolicy
+from repro.fork.tree import build_fork_tree
 from repro.net import AccessRevoked, LeaseExpired
 from repro.placement.policy import PlacementPolicy, SpreadPolicy
+from repro.placement.route import ReplicaSource, Router
 
 
 class ShardedSeed:
@@ -196,11 +200,64 @@ class ShardedSeed:
             aspace[vma.name] = vma
             self.serve_counts[owner] += 1
         ancestry = [primary.parent_node] + list(desc.ancestry)
-        return instantiate_child(child_node, policy, desc, aspace, ancestry)
+        inst = instantiate_child(child_node, policy, desc, aspace, ancestry)
+        if policy.reroute_backlog is not None and len(pairs) > 1:
+            # every replica's descriptor is already in hand: keep the
+            # alternate frame tables + keys so the child's fault handler can
+            # divert hop-1 reads off a hot (or lost) parent link
+            inst.router = Router(child_node.network, plan,
+                                 self._route_sources(pairs),
+                                 threshold=policy.reroute_backlog)
+        return inst
 
-    def fan_out(self, nodes: Sequence,
-                policy: Optional[ForkPolicy] = None) -> List["object"]:
-        """One child per target node, each with its own rotated route plan
-        so per-child primary descriptors and tie-broken VMA assignments
-        cycle through the replica set."""
-        return [self.resume_on(n, policy) for n in nodes]
+    @staticmethod
+    def _route_sources(pairs):
+        """vma name -> {replica parent -> ReplicaSource}: each replica's
+        own frame table, prepared DC key and payload size for every VMA —
+        the Router's re-route alternatives."""
+        sources = {}
+        for h, d in pairs:
+            prepared = d.extra["prepared_keys"]
+            for vd in d.vmas:
+                nbytes = (int(np.prod(vd["shape"]))
+                          * np.dtype(vd["dtype"]).itemsize)
+                sources.setdefault(vd["name"], {})[h.parent_node] = \
+                    ReplicaSource(
+                        frames=np.frombuffer(vd["frames"], np.int32),
+                        dc_key=prepared[vd["name"]], nbytes=nbytes)
+        return sources
+
+    def fan_out(self, nodes: Sequence, policy: Optional[ForkPolicy] = None,
+                tree_degree: Optional[int] = None,
+                child_lease: Optional[float] = None):
+        """Fork one child per target node.
+
+        ``tree_degree=None`` (default) keeps the flat fan-out: every child
+        resumes straight off the replica set, each with its own rotated
+        route plan.  With ``tree_degree=k`` the fan-out grows a §6.3 fork
+        tree *under the seed's placement policy*: the sharded seed itself
+        serves the first ``k × replicas`` children (its NIC budget is S
+        parent links, not one), and when that frontier is exhausted the
+        next short-lived re-seed is promoted from the child on the
+        least-loaded side of the cluster — smallest live link backlog
+        (``Network.link_backlog``), then smallest NIC-time ledger — instead
+        of by raw descriptor-count order.  Returns a
+        :class:`~repro.fork.tree.ForkTree` (flat mode returns the plain
+        child list)."""
+        if tree_degree is None:
+            return [self.resume_on(n, policy) for n in nodes]
+
+        def promote_least_loaded(promotable):
+            # placement-aware promotion: re-seed on the least-loaded
+            # replica's side of the cluster — smallest live link backlog,
+            # then smallest NIC-time ledger, then BFS order
+            net = promotable[0][0].node.network
+            return min(range(len(promotable)), key=lambda j: (
+                net.link_backlog(promotable[j][0].node.node_id),
+                net.node_busy(promotable[j][0].node.node_id), j))
+
+        return build_fork_tree(
+            self, nodes, policy=policy, tree_degree=tree_degree,
+            child_lease=child_lease,
+            root_quota=tree_degree * max(1, len(self.live_handles())),
+            promote=promote_least_loaded)

@@ -66,7 +66,8 @@ def _seed_handles(seed: Seed) -> List[ForkHandle]:
 class Coordinator:
     def __init__(self, network, nodes: List[NodeRuntime], clock=time.monotonic,
                  scheduler=None, seed_replicas: int = 1,
-                 seed_placement: Optional[PlacementPolicy] = None):
+                 seed_placement: Optional[PlacementPolicy] = None,
+                 reroute_backlog: Optional[float] = None):
         self.network = network
         self.nodes = {n.node_id: n for n in nodes}
         self.clock = clock
@@ -84,6 +85,10 @@ class Coordinator:
         # replication defaults applied by the coldstart auto-seed path
         self.seed_replicas = seed_replicas
         self.seed_placement = seed_placement
+        # seconds of planned-owner link backlog above which sharded forks
+        # re-route VMAs to a cooler replica (ForkPolicy.reroute_backlog on
+        # every platform fork); None = static routes
+        self.reroute_backlog = reroute_backlog
 
     def _lease_event(self, func: str, event: str, n: int = 1) -> None:
         self.lease_telemetry.setdefault(func, Counter())[event] += n
@@ -209,8 +214,9 @@ class Coordinator:
         if inst is None and policy == "fork":
             seed = self._fresh_seed(func)
             if seed is not None:
-                inst = seed.resume_on(node, ForkPolicy(lazy=lazy,
-                                                       prefetch=prefetch))
+                inst = seed.resume_on(node, ForkPolicy(
+                    lazy=lazy, prefetch=prefetch,
+                    reroute_backlog=self.reroute_backlog))
                 if isinstance(seed, ShardedSeed):
                     # a replica can die between the freshness check and the
                     # fetch; the resume re-routes and records the victim

@@ -1,0 +1,407 @@
+"""Per-node link capacity in the sim clock (NetModel.node_links), the
+async connection-setup fix, channel_wait_s stall metering, Router hot-spot
+re-routing, and the placement-aware sharded fork tree.
+
+Invariants pinned here:
+
+* K-way fan-in from one parent queues on that parent's NIC in *sim_time*
+  (not just the node_busy ledger), and finishes no earlier than the
+  parent-link serialization bound;
+* S=1 -> 2 -> 4 seed sharding relieves the bound at equal bytes moved;
+* a reroute sweep moves ZERO extra bytes — byte-identical to the static
+  plan, only the queueing differs;
+* an async read over a COLD connection leaves the clock untouched at
+  issue (the stall async prefetch exists to hide).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.instance import ModelInstance
+from repro.core.prefetch import issue_fan_in
+from repro.fork import ForkPolicy
+from repro.net import NetModel, Network
+from repro.placement import TransportAwareScheduler, route_demand
+from repro.platform.coordinator import Coordinator, FunctionDef
+from repro.platform.node import NodeRuntime
+
+from conftest import FakeClock
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def _mk_coord(hello_cfg, hello_params, n_nodes=12, node_links=1):
+    net = Network(model=NetModel(node_links=node_links))
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(n_nodes)]
+    coord = Coordinator(net, nodes, clock=clock)
+    coord.register_function(FunctionDef(
+        name="f", arch=hello_cfg.name,
+        make_params=lambda: hello_params,
+        behavior=lambda inst, ctx: {"ok": True}))
+    return net, nodes, coord
+
+
+def _issue_all(child):
+    """Put one child's entire working set in flight (async)."""
+    issue_fan_in([child])
+
+
+def _heat_link(net, node, seconds_of_pages=4096):
+    """Organically occupy ``node``'s link: one large async read from a
+    bystander rides the real charge path and backlogs the NIC."""
+    frames = node.pool.alloc("float32", seconds_of_pages)
+    key = net.create_dc_target(node.node_id)
+    net.read_pages("bystander", node.node_id, "float32", frames, key,
+                   async_read=True)
+    return net.link_backlog(node.node_id)
+
+
+# ---------------------------------------------------------------------------
+# the link clock: fan-in serializes on the parent NIC
+# ---------------------------------------------------------------------------
+
+
+def test_async_fan_in_queues_on_parent_link():
+    """K children reading from one parent over K distinct channels used to
+    overlap for free; with the link clock their completions stack up."""
+    net = Network()
+    owner = NodeRuntime("owner", net, page_elems=64)
+    key = net.create_dc_target("owner")
+    t0 = net.sim_time
+    done = []
+    for i in range(4):
+        frames = owner.pool.alloc("float32", 16)
+        net.read_pages(f"child{i}", "owner", "float32", frames, key,
+                       async_read=True)
+        done.append(net.channel_busy(f"child{i}", "owner"))
+    assert all(b > a for a, b in zip(done, done[1:])), \
+        "fan-in must queue on the owner link"
+    # the serialization bound: last completion >= total wire time served
+    assert done[-1] - t0 >= net.node_busy("owner") - 1e-12
+    assert net.link_busy_until("owner") == done[-1]
+
+
+def test_link_clock_disabled_restores_channel_only_overlap():
+    net = Network(model=NetModel(node_links=0))
+    owner = NodeRuntime("owner", net, page_elems=64)
+    key = net.create_dc_target("owner")
+    done = []
+    for i in range(4):
+        frames = owner.pool.alloc("float32", 16)
+        net.read_pages(f"child{i}", "owner", "float32", frames, key,
+                       async_read=True)
+        done.append(net.channel_busy(f"child{i}", "owner"))
+    # distinct channels, no link budget: identical wire time each, with
+    # only the first paying the (deferred) dct setup
+    assert done[1] == done[2] == done[3]
+    assert net.link_free("owner") == 0.0 and net.link_backlog("owner") == 0.0
+
+
+def test_wider_link_admits_parallel_transfers():
+    stamps = {}
+    for links in (1, 2):
+        net = Network(model=NetModel(node_links=links))
+        owner = NodeRuntime("owner", net, page_elems=64)
+        key = net.create_dc_target("owner")
+        # 3 transfers over 2 lanes: lanes drain unevenly, so the makespan
+        # (last busy lane) and the next-free stamp genuinely differ
+        for i in range(3):
+            frames = owner.pool.alloc("float32", 16)
+            net.read_pages(f"child{i}", "owner", "float32", frames, key,
+                           async_read=True)
+        stamps[links] = net.link_busy_until("owner")
+        if links > 1:
+            assert net.link_free("owner") < net.link_busy_until("owner"), \
+                "next-free lane != last-busy lane on a wide link"
+    assert stamps[2] < stamps[1], "a 2-lane NIC drains a 3-way fan-in faster"
+
+
+def test_sync_fan_in_elapsed_meets_serialization_bound(hello_cfg,
+                                                       hello_params):
+    """K children draining one single-replica seed: sim elapsed >= the
+    parent's total wire seconds (its NIC is the only data path)."""
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=6)
+    seed = coord.deploy_seed("f", nodes[0])
+    children = [seed.resume_on(nodes[1 + i], ForkPolicy(async_prefetch=64))
+                for i in range(4)]
+    t0, busy0 = net.sim_time, net.node_busy("node0")
+    issue_fan_in(children)
+    for c in children:
+        c.prefetch_engine.drain_all()
+    wire = net.node_busy("node0") - busy0
+    assert wire > 0
+    assert net.sim_time - t0 >= wire - 1e-12
+    for c in children:
+        got = c.materialize_pytree()
+        for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_sharding_relieves_parent_link_bound(hello_cfg, hello_params):
+    """S=1 -> 2 -> 4 replicas at equal bytes: the async fan-in makespan
+    (last busy parent link) strictly shrinks as NICs are added."""
+    makespan, moved = {}, {}
+    for s in (1, 2, 4):
+        net, nodes, coord = _mk_coord(hello_cfg, hello_params)
+        seed = coord.deploy_seed("f", nodes[0], replicas=s)
+        parents = [seed.parent_node] if s == 1 else list(seed.parent_nodes)
+        children = [seed.resume_on(nodes[4 + i],
+                                   ForkPolicy(async_prefetch=256,
+                                              descriptor_fetch="rpc"))
+                    for i in range(6)]
+        t0, b0 = net.sim_time, net.meter["dct.bytes"]
+        issue_fan_in(children)
+        makespan[s] = max(net.link_busy_until(p) for p in parents) - t0
+        moved[s] = net.meter["dct.bytes"] - b0
+    assert moved[1] == moved[2] == moved[4], "working set must not scale with S"
+    assert makespan[1] > makespan[2] > makespan[4]
+
+
+# ---------------------------------------------------------------------------
+# channel_wait_s: sync stalls are metered, not absorbed
+# ---------------------------------------------------------------------------
+
+
+def test_sync_stall_on_busy_channel_metered():
+    net = Network()
+    owner = NodeRuntime("owner", net, page_elems=64)
+    key = net.create_dc_target("owner")
+    net.set_channel_busy("child", "owner", net.sim_time + 0.5)
+    frames = owner.pool.alloc("float32", 4)
+    net.read_pages("child", "owner", "float32", frames, key,
+                   transport="tpu_ici")     # connectionless: no setup term
+    assert net.meter["channel_wait_s"] == pytest.approx(0.5)
+    assert "channel_wait_s" in net.snapshot()
+
+
+def test_sync_stall_behind_hot_link_metered():
+    """A sync reader queues behind another child's transfer at the SAME
+    owner even though the two ride different channels."""
+    net = Network()
+    owner = NodeRuntime("owner", net, page_elems=64)
+    key = net.create_dc_target("owner")
+    backlog = _heat_link(net, owner, 1024)
+    assert backlog > 0
+    frames = owner.pool.alloc("float32", 4)
+    net.read_pages("child", "owner", "float32", frames, key,
+                   transport="tpu_ici")
+    assert net.meter["channel_wait_s"] == pytest.approx(backlog)
+
+
+# ---------------------------------------------------------------------------
+# async connection setup must not block the clock (satellite regression)
+# ---------------------------------------------------------------------------
+
+
+def test_cold_rc_async_prefetch_leaves_clock_untouched(hello_cfg,
+                                                       hello_params):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024) for i in range(2)]
+    parent = ModelInstance.create(nodes[0], hello_cfg.name, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    child = handle.resume_on(nodes[1], ForkPolicy(
+        async_prefetch=64, page_fetch="rc", descriptor_fetch="rpc"))
+    assert not net.has_connection("rc", "node1", "node0")   # still cold
+    t0 = net.sim_time
+    _issue_all(child)
+    # the 4 ms QP connect did NOT stall the child's clock...
+    assert net.sim_time == t0
+    assert net.meter["rc.setups"] == 1                      # ...but is metered
+    # ...and is served on the channel ahead of the payload
+    assert net.channel_busy("node1", "node0") > t0 + net.model.rc_setup
+    child.prefetch_engine.drain_all()
+    assert net.sim_time >= t0 + net.model.rc_setup
+    got = child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Router: load-triggered RoutePlan.reroute
+# ---------------------------------------------------------------------------
+
+
+def _touch_all(child):
+    for name in child.leaf_names:
+        child.touch_pages(name, np.arange(child.aspace[name].npages))
+
+
+def _routed_run(hello_cfg, hello_params, reroute_backlog):
+    """One S=2 fan-out with parent[0]'s link pre-heated; returns
+    (child, sim elapsed, page bytes moved, net)."""
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=6)
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    hot = seed.parent_nodes[0]
+    child = seed.resume_on(nodes[4], ForkPolicy(
+        descriptor_fetch="rpc", reroute_backlog=reroute_backlog))
+    _heat_link(net, coord.nodes[hot], 4096)
+    t0, b0 = net.sim_time, net.meter["dct.bytes"]
+    _touch_all(child)
+    return child, net.sim_time - t0, net.meter["dct.bytes"] - b0, net
+
+
+def test_reroute_diverts_hot_parent_and_moves_zero_extra_bytes(hello_cfg,
+                                                               hello_params):
+    static_child, static_s, static_bytes, static_net = _routed_run(
+        hello_cfg, hello_params, reroute_backlog=None)
+    routed_child, routed_s, routed_bytes, routed_net = _routed_run(
+        hello_cfg, hello_params, reroute_backlog=1e-5)
+    # the static plan stalls behind the hot NIC (and says so in the meter)
+    assert static_child.router is None
+    assert static_net.meter["channel_wait_s"] > 0
+    # the reroute sweep is byte-identical: same pages, different NIC
+    assert routed_bytes == static_bytes
+    assert routed_child.router.reroutes > 0
+    assert routed_net.meter["reroutes"] == routed_child.router.reroutes
+    assert routed_s < static_s, "re-routing must dodge the hot-parent stall"
+    got = routed_child.materialize_pytree()
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_router_reroutes_around_crashed_owner(hello_cfg, hello_params):
+    """Crash degradation through the same mechanism: a planned owner that
+    left the network is infinitely hot, so a routed child's reads divert
+    to the surviving replica instead of raising ConnectionError."""
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=6)
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    child = seed.resume_on(nodes[4], ForkPolicy(
+        descriptor_fetch="rpc", reroute_backlog=1e-3))
+    victim = next(vma.ancestry[0] for vma in child.aspace.values())
+    survivor = next(p for p in seed.parent_nodes if p != victim)
+    coord.nodes[victim].crash()
+    got = child.materialize_pytree()            # no ConnectionError
+    assert child.router.reroutes > 0
+    assert all(vma.ancestry[0] == survivor or not vma.ancestry
+               for vma in child.aspace.values()
+               if vma.name in child.router.plan.routes)
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_lazy_restamp_never_targets_crashed_owner(hello_cfg, hello_params):
+    """A VMA whose plan moved on an EARLIER fault re-stamps lazily; if the
+    new owner crashed in between, the Router must re-route again (or keep
+    the live stamp) instead of pointing the page table at a dead node."""
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=6)
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    child = seed.resume_on(nodes[4], ForkPolicy(
+        descriptor_fetch="rpc", reroute_backlog=1e-5))
+    plan = child.router.plan
+    by_owner = {}
+    for name, r in plan.routes.items():
+        by_owner.setdefault(r.owner, []).append(name)
+    hot, names = max(by_owner.items(), key=lambda e: len(e[1]))
+    assert len(names) >= 2, "need two VMAs planned on one owner"
+    vma_a, vma_b = names[0], names[1]
+    other = next(o for o in by_owner if o != hot)
+    _heat_link(net, coord.nodes[hot], 4096)
+    child.touch_pages(vma_a, [0])           # reroutes hot's share to other
+    assert child.aspace[vma_a].ancestry[0] == other
+    assert plan.routes[vma_b].owner == other    # plan moved...
+    assert child.aspace[vma_b].ancestry[0] == hot   # ...stamp lags (lazy)
+    coord.nodes[other].crash()              # new owner dies before b faults
+    child.touch_pages(vma_b, [0])           # must not raise ConnectionError
+    assert child.aspace[vma_b].ancestry[0] == hot, \
+        "lazy re-stamp must never target a crashed owner"
+    got = child.materialize_pytree()        # everything still serves
+    for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_router_not_attached_without_policy_or_shards(hello_cfg,
+                                                      hello_params):
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=6)
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    assert seed.resume_on(nodes[4]).router is None          # no threshold
+    coord.register_function(FunctionDef(
+        name="g", arch=hello_cfg.name, make_params=lambda: hello_params,
+        behavior=lambda inst, ctx: {"ok": True}))
+    lone = coord.deploy_seed("g", nodes[1])
+    child = lone.resume_on(nodes[5], ForkPolicy())
+    assert child.router is None                             # plain handle
+
+
+def test_coordinator_reroute_backlog_reaches_fork_policy(hello_cfg,
+                                                         hello_params):
+    net = Network()
+    clock = FakeClock()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=1024, clock=clock)
+             for i in range(6)]
+    coord = Coordinator(net, nodes, clock=clock, reroute_backlog=2e-4)
+    coord.register_function(FunctionDef(
+        name="f", arch=hello_cfg.name, make_params=lambda: hello_params,
+        behavior=lambda inst, ctx: {"ok": True}))
+    coord.deploy_seed("f", nodes[0], replicas=2)
+    out, inst = coord.invoke("f", node=nodes[4])
+    assert out["ok"]
+    assert inst.router is not None and inst.router.threshold == 2e-4
+
+
+# ---------------------------------------------------------------------------
+# scheduler: setup estimates dedupe; link backlog scores
+# ---------------------------------------------------------------------------
+
+
+def test_scheduler_setup_estimate_deduped_per_connection():
+    """A 40-VMA plan routed to one owner is ONE connection, not 40."""
+    net = Network()
+    for i in range(3):
+        NodeRuntime(f"node{i}", net, page_elems=64)
+    sched = TransportAwareScheduler(net)
+    one = sched.score("node1", route_demand(["node0"], ["rc"]))
+    many = sched.score("node1", route_demand(["node0"], ["rc"]) * 40)
+    assert many == one == pytest.approx(net.model.rc_setup)
+    # None and the spelled-out default backend are the same connection
+    spelled = sched.score("node1", [("node0", None),
+                                    ("node0", net.transport)])
+    assert spelled == sched.score("node1", [("node0", None)])
+
+
+def test_scheduler_scores_candidate_link_backlog():
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=64) for i in range(3)]
+    _heat_link(net, nodes[1], 1024)         # node1's NIC is busy
+    sched = TransportAwareScheduler(net)
+    demand = route_demand(["node0"], [None])
+    picked = sched.pick({n.node_id: n for n in nodes},
+                        exclude={"node0"}, demand=demand)
+    assert picked.node_id == "node2", "children avoid a backlogged NIC"
+
+
+# ---------------------------------------------------------------------------
+# placement-aware sharded fork trees
+# ---------------------------------------------------------------------------
+
+
+def test_sharded_fan_out_tree_promotes_reseeds(hello_cfg, hello_params):
+    from repro.fork.tree import ForkTree
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=10)
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    targets = [nodes[3 + i] for i in range(6)]
+    tree = seed.fan_out(targets, ForkPolicy(descriptor_fetch="rpc"),
+                        tree_degree=1)
+    assert isinstance(tree, ForkTree) and len(tree) == 6
+    # the sharded root serves tree_degree x S children before any promotion
+    served = tree.served_by()
+    assert served[(seed.parent_node, seed.handler_id)] == 2
+    assert tree.seeds and tree.depth() >= 2
+    for child in tree.children:
+        got = child.materialize_pytree()
+        for a, b in zip(jax.tree.leaves(hello_params), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    tree.close()
+    assert all(not h.alive for h in tree.seeds)
+    assert seed.alive, "closing the tree never reclaims the root seed"
+
+
+def test_sharded_fan_out_flat_mode_unchanged(hello_cfg, hello_params):
+    net, nodes, coord = _mk_coord(hello_cfg, hello_params, n_nodes=8)
+    seed = coord.deploy_seed("f", nodes[0], replicas=2)
+    children = seed.fan_out([nodes[4], nodes[5]])
+    assert isinstance(children, list) and len(children) == 2
