@@ -22,6 +22,7 @@ from repro.core.instance import ModelInstance
 from repro.net import Network
 from repro.models import lm
 from repro.platform.node import NodeRuntime
+from repro.sim import SimClock
 
 # the paper's function suite, mapped to instance sizes (see micro.py)
 FUNCTIONS = {
@@ -34,10 +35,24 @@ FUNCTIONS = {
 PAGE_ELEMS = 4096
 
 
-def make_cluster(n_nodes: int = 4, cache: bool = False, transport="dct"):
+def make_cluster(n_nodes: int = 4, cache: bool = False, transport="dct",
+                 clock=None, pool_frames: int = 0):
+    """Build a benchmark cluster.  ``clock="sim"`` wires every node's lease
+    clock to the network's sim time (``repro.sim.SimClock``) so replay-driven
+    renew/expiry/GC tick in simulated seconds; any other callable is passed
+    through to the nodes.  ``pool_frames`` pre-reserves per-node frame
+    capacity (lazily zeroed) so container churn never pays pool-growth
+    copies.  Construction is O(n_nodes): per-pair channel and per-node lane
+    state at the Network is created lazily on first traffic, so fleets of
+    1000+ sim nodes build in linear time (tests/test_cluster_scale.py pins
+    this)."""
     net = Network(transport=transport)
+    if clock == "sim":
+        clock = SimClock(net)
+    extra = {} if clock is None else {"clock": clock}
     nodes = [NodeRuntime(f"node{i}", net, page_elems=PAGE_ELEMS,
-                         cache_enabled=cache) for i in range(n_nodes)]
+                         cache_enabled=cache, pool_frames=pool_frames,
+                         **extra) for i in range(n_nodes)]
     return net, nodes
 
 

@@ -1,26 +1,128 @@
-"""Figure 20: load-spike replay (Azure-trace-shaped): latency CDF points and
-per-machine memory timeline for MITOSIS vs Caching(Fn) vs coldstart."""
+"""Figure 20: load-spike replay (Azure trace 660323) — MITOSIS fork-on-demand
+vs Caching(Fn) vs coldstart, now driven through ``repro.sim``.
+
+* ``fig20.replay.*`` — the real thing: a discrete-event :class:`ReplayEngine`
+  schedules every invocation of the spike trace as an arrival event and
+  serves it through the actual platform (``Coordinator`` seed store + GC on
+  the sim clock, fork descriptor fetch + auth + demand paging over contended
+  link lanes).  There is no analytical latency shortcut — an invocation's
+  latency is whatever the data plane charged between arrival and completion.
+  Policies compare at an EQUAL WARM BUDGET: ``ForkOnDemand(replicas=S)``
+  against ``KeepWarm(prewarm=S)``, plus a bounded-pool ``Hybrid`` row and a
+  coldstart control.
+* ``fig20.legacy.*`` — the previous closed-form minute-granularity model,
+  kept for one release as a cross-check, with its two bugs fixed:
+  warm-pool consumption is now LIFO (the old ``cache = cache[hits:]``
+  consumed the *oldest* entries, so TTL expiry almost never fired), and
+  p99 is the interpolated percentile (the old index clamp reported the
+  max on short traces).
+
+``run(write_json=path)`` (and ``--smoke``) writes ``BENCH_spikes.json``;
+``--smoke`` exits non-zero unless the replayed MITOSIS p99 is >= 80% below
+caching-at-equal-warm-budget, keep-warm peak per-node memory is >= 10x the
+fork row's, and a repeated replay at the same seed reproduces the event
+log byte-for-byte.
+"""
 from __future__ import annotations
 
-import numpy as np
+import argparse
+import gc
+import json
+import sys
+import time
 
-from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
+from benchmarks.common import deploy_parent, make_cluster
+from repro.sim import (ColdStart, ForkOnDemand, Hybrid, KeepWarm,
+                       ReplayEngine, SimFunction, percentile, spike_660323)
 
-FN = "json"
-EXEC_S = 0.030            # modeled function body
+FN = "spike"
+EXEC_S = 0.030            # modeled function body (paper fig20: 30 ms)
+COLD_S = 0.167            # paper §2: 167 ms local coldstart
 CACHE_TTL = 60.0          # Fn keeps coldstarted containers warm ~1 trace tick
-# per-minute call counts shaped like the paper's 660323 trace
+HOLD_S = 60.0             # container occupancy = the trace's minute tick —
+#                           the legacy model's one-call-per-container-per-
+#                           minute assumption, enforced by completion events
+PAGE_ELEMS = 1024         # 4 KiB sim pages: page COUNT (16/container) drives
+#                           the fault traffic and the memory-ratio gate;
+#                           smaller pages cut the byte volume cold boots must
+#                           physically copy, keeping smoke under the minute
+STATE_BYTES = 16 * PAGE_ELEMS * 4   # pristine container state, 16 pages
+TOUCH = 0.05              # handler touches 5% of state (>= 1 page)
+WARM_BUDGET = 4           # S fork replicas == S prewarmed containers
+SCALE = 50                # spike trace x50 -> 10050 invocations
+N_NODES = 64
+SEED = 20260809
+
+# legacy closed-form inputs (unchanged from the pre-replay rows)
+LEGACY_FN = "json"
 TRACE = [1, 1, 2, 1, 1, 40, 120, 30, 2, 1, 1, 1]
 
+POLICIES = {
+    "mitosis": lambda: ForkOnDemand(replicas=WARM_BUDGET, prefetch=0),
+    "caching": lambda: KeepWarm(ttl=CACHE_TTL, prewarm=WARM_BUDGET),
+    "hybrid": lambda: Hybrid(pool=WARM_BUDGET, ttl=CACHE_TTL, prefetch=0),
+    "coldstart": lambda: ColdStart(),
+}
 
-def run():
+
+def _sim_function() -> SimFunction:
+    return SimFunction(FN, state_bytes=STATE_BYTES, touch_frac=TOUCH,
+                       exec_s=EXEC_S, coldstart_s=COLD_S, hold_s=HOLD_S)
+
+
+def replay_once(label: str, scale: int = SCALE, n_nodes: int = N_NODES,
+                seed: int = SEED):
+    """One (policy, trace) replay -> (deterministic summary, wall seconds)."""
+    trace = spike_660323(scale=scale)
+    eng = ReplayEngine(trace, POLICIES[label](), [_sim_function()],
+                       n_nodes=n_nodes, seed=seed, page_elems=PAGE_ELEMS)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    summary = res.summary()
+    # Drop the replay's object graph before the next row: a retained engine
+    # (10^5 event-log entries + 64 node pools) makes the cyclic collector
+    # rescan it during the next row's allocation churn — measured ~10x
+    # slower back-to-back rows on this host without the explicit collect.
+    del eng, res, trace
+    gc.collect()
+    return summary, wall
+
+
+def run_replay(scale: int = SCALE, n_nodes: int = N_NODES, seed: int = SEED):
+    """The fig20.replay.* rows; returns (rows, per-policy summaries)."""
+    rows, reps = [], {}
+    for label in POLICIES:
+        s, wall = replay_once(label, scale=scale, n_nodes=n_nodes, seed=seed)
+        lat, startup = s["latency"]["all"], s["startup"]["all"]
+        rows.append(dict(
+            name=f"fig20.replay.{label}",
+            us_per_call=int(wall / max(1, s["invocations"]) * 1e6),
+            invocations=s["invocations"],
+            nodes=s["nodes"],
+            p50_us=lat["p50_us"],
+            p99_us=lat["p99_us"],
+            p999_us=lat["p999_us"],
+            startup_p99_us=startup["p99_us"],
+            warm=s["decisions"].get("warm", 0),
+            forks=s["decisions"].get("fork", 0),
+            colds=s["decisions"].get("cold", 0),
+            rdma_pages=s["payload_pages"].get("pages_rdma", 0),
+            peak_node_mb=s["mem_peak_node_mb"],
+            peak_total_mb=s["mem_peak_total_mb"],
+            digest=s["event_log_digest"][:12]))
+        reps[label] = s
+    return rows, reps
+
+
+def run_legacy():
+    """The closed-form minute-granularity rows (bug-fixed, one release)."""
     rows = []
     for policy in ("mitosis", "caching", "coldstart"):
         net, nodes = make_cluster(4)
-        parent = deploy_parent(nodes[0], FN)
+        parent = deploy_parent(nodes[0], LEGACY_FN)
         nodes[0].prepare_fork(parent)       # the one provisioned seed
         state_b = parent.total_bytes()
-        cold_s = 0.167                      # paper: 167 ms local coldstart
         cache: list = []                    # expiry minutes of idle containers
         lat, mem_tl = [], []
         for minute, calls in enumerate(TRACE):
@@ -32,23 +134,121 @@ def run():
                 mem = state_b                        # ONE seed cluster-wide
             elif policy == "caching":
                 # calls within a minute are concurrent: each needs its own
-                # container; hits = available cached, misses coldstart
+                # container; hits = available cached, misses coldstart.
+                # Consumption is LIFO — the most recently parked containers
+                # serve, the oldest stay put and age out via TTL.
                 hits = min(len(cache), calls)
                 misses = calls - hits
-                lat += [0.0005 + EXEC_S] * hits + [cold_s + EXEC_S] * misses
-                cache = cache[hits:] + \
-                    [minute + CACHE_TTL / 60] * calls   # all return to cache
+                lat += [0.0005 + EXEC_S] * hits + [COLD_S + EXEC_S] * misses
+                if hits:
+                    del cache[-hits:]
+                cache += [minute + CACHE_TTL / 60] * calls  # all re-park
                 mem = len(cache) * state_b
             else:
-                lat += [cold_s + EXEC_S] * calls
+                lat += [COLD_S + EXEC_S] * calls
                 mem = 0
             mem_tl.append(mem / 4 / 2**20)          # per-machine MiB
-        lat = np.sort(np.asarray(lat))
         rows.append(dict(
-            name=f"fig20.{policy}",
-            us_per_call=int(lat.mean() * 1e6),
-            p50_us=int(lat[int(0.5 * len(lat))] * 1e6),
-            p99_us=int(lat[min(int(0.99 * len(lat)), len(lat) - 1)] * 1e6),
+            name=f"fig20.legacy.{policy}",
+            us_per_call=int(sum(lat) / len(lat) * 1e6),
+            p50_us=int(percentile(lat, 50.0) * 1e6),
+            p99_us=int(percentile(lat, 99.0) * 1e6),
             idle_mem_mb=round(mem_tl[0], 2),
             peak_mem_mb=round(max(mem_tl), 2)))
     return rows
+
+
+def run_sweeps(write_json=None, scale: int = SCALE, n_nodes: int = N_NODES,
+               seed: int = SEED):
+    """Replay + legacy rows plus the gated summary; returns (rows, summary)."""
+    replay_rows, reps = run_replay(scale=scale, n_nodes=n_nodes, seed=seed)
+    legacy_rows = run_legacy()
+    rows = replay_rows + legacy_rows
+
+    mit, cach = reps["mitosis"], reps["caching"]
+    mit_p99 = mit["latency"]["all"]["p99_us"]
+    cach_p99 = cach["latency"]["all"]["p99_us"]
+    mem_ratio = cach["mem_peak_node_mb"] / max(mit["mem_peak_node_mb"], 1e-9)
+    # determinism witness: a small replay repeated at the same seed must
+    # reproduce the full summary (event log digest included) exactly
+    d1, _ = replay_once("mitosis", scale=2, n_nodes=8, seed=seed)
+    d2, _ = replay_once("mitosis", scale=2, n_nodes=8, seed=seed)
+
+    summary = {
+        "schema": "spikes-bench/v1",
+        "rows": rows,
+        "replay": {
+            "trace": mit["trace"],
+            "seed": seed,
+            "nodes": n_nodes,
+            "invocations": mit["invocations"],
+            "equal_warm_budget": WARM_BUDGET,
+            "p99_us": {k: reps[k]["latency"]["all"]["p99_us"]
+                       for k in POLICIES},
+            # mitosis p99 must sit >= 80% below caching at equal warm budget
+            "p99_reduction": round(1.0 - mit_p99 / cach_p99, 4),
+            "p99_gate": mit_p99 <= 0.2 * cach_p99,
+            "mem_peak_node_mb": {k: reps[k]["mem_peak_node_mb"]
+                                 for k in POLICIES},
+            # keep-warm provisioning must cost >= 10x the fork row's memory
+            "mem_ratio": round(mem_ratio, 2),
+            "mem_gate": mem_ratio >= 10.0,
+            "deterministic": d1 == d2,
+            "event_log_digest": {k: reps[k]["event_log_digest"]
+                                 for k in POLICIES},
+            "gc": {k: reps[k]["gc"] for k in POLICIES},
+            "lease": mit["lease"],
+        },
+    }
+    if write_json:
+        # wall time is machine noise — the tracked artifact keeps only the
+        # deterministic replay/meter fields so diffs mean real regressions
+        tracked = dict(summary)
+        tracked["rows"] = [{k: v for k, v in r.items() if k != "us_per_call"}
+                           for r in rows]
+        with open(write_json, "w") as f:
+            json.dump(tracked, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return rows, summary
+
+
+def run(write_json=None):
+    """Harness entry point (benchmarks/run.py): replay + legacy rows."""
+    return run_sweeps(write_json=write_json)[0]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="write BENCH_spikes.json and fail unless the "
+                         "replayed p99/memory gates hold and the replay is "
+                         "deterministic under the fixed seed")
+    ap.add_argument("--json", default="BENCH_spikes.json",
+                    help="output path for the spike-replay summary")
+    ap.add_argument("--scale", type=int, default=SCALE,
+                    help="spike trace multiplier (default %(default)s -> "
+                         "10050 invocations)")
+    ap.add_argument("--nodes", type=int, default=N_NODES)
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+    rows, s = run_sweeps(write_json=args.json, scale=args.scale,
+                         n_nodes=args.nodes, seed=args.seed)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"wrote {args.json}")
+    if args.smoke:
+        rp = s["replay"]
+        ok = rp["p99_gate"] and rp["mem_gate"] and rp["deterministic"]
+        print(f"smoke: {rp['invocations']} invocations on {rp['nodes']} "
+              f"nodes; p99 {rp['p99_us']} "
+              f"(reduction={rp['p99_reduction']:.1%}, gate>=80%), "
+              f"peak node MB {rp['mem_peak_node_mb']} "
+              f"(ratio={rp['mem_ratio']}x, gate>=10x), "
+              f"deterministic={rp['deterministic']} "
+              f"-> {'OK' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -76,7 +76,11 @@ class ModelInstance:
         names, paths, leaves = desc_mod.flatten_with_names(pytree)
         inst = cls(node, arch, kind, {}, paths, names, [], registers or {"step": 0})
         for name, leaf in zip(names, leaves):
-            leaf = jnp.asarray(leaf)
+            # host leaves stay host-side: the pool is host memory and a
+            # device round trip per leaf would dominate container boot at
+            # replay scale; ensure_tensor materializes on demand
+            if not isinstance(leaf, np.ndarray):
+                leaf = jnp.asarray(leaf)
             pages = paging.to_pages(leaf, node.pool.page_elems)
             frames = node.pool.alloc(leaf.dtype, pages.shape[0])
             node.pool.write_pages(leaf.dtype, frames, pages)
@@ -158,7 +162,7 @@ class ModelInstance:
                                                    remote_frames)
             hit = cached >= 0
             if hit.any():
-                data = self.node.pool.read_pages(vma.dtype, cached[hit])
+                data = self.node.pool.read_pages_host(vma.dtype, cached[hit])
                 self._adopt_pages(vma, plist[hit], data)
                 self.stats["pages_cached"] += int(hit.sum())
 

@@ -12,7 +12,17 @@ def num_pages(size: int, page_elems: int) -> int:
 
 
 def to_pages(arr, page_elems: int):
-    """Flatten + pad a tensor into (n_pages, page_elems)."""
+    """Flatten + pad a tensor into (n_pages, page_elems).  Host arrays stay
+    host arrays (packing is memory layout, not compute): container churn in
+    fleet-scale replays boots thousands of instances from host pytrees, and
+    a jax dispatch per leaf would dominate the boot cost."""
+    if isinstance(arr, np.ndarray):
+        flat = np.ravel(arr)
+        n = num_pages(flat.size, page_elems)
+        pad = n * page_elems - flat.size
+        if pad:
+            flat = np.pad(flat, (0, pad))
+        return flat.reshape(n, page_elems)
     flat = jnp.ravel(arr)
     n = num_pages(flat.size, page_elems)
     pad = n * page_elems - flat.size

@@ -27,9 +27,15 @@ class PagePool:
     node's simulated physical memory); reads hand out jnp arrays.  On real
     TPU the pool is a device buffer updated by the cow_scatter kernel."""
 
-    def __init__(self, page_elems: int = PAGE_ELEMS, grow_frames: int = 256):
+    def __init__(self, page_elems: int = PAGE_ELEMS, grow_frames: int = 256,
+                 initial_frames: int = 0):
         self.page_elems = page_elems
         self.grow_frames = grow_frames
+        # reserve this many frames per dtype up front: np.zeros is lazy
+        # (calloc), so a large reserve costs nothing until frames are
+        # touched, while every growth step copies the whole pool — replay
+        # clusters reserve their working set and never pay a copy
+        self.initial_frames = initial_frames
         self._frames: Dict[str, np.ndarray] = {}    # dtype name -> (F, page_elems)
         self._free: Dict[str, List[int]] = {}       # kept sorted ascending
         self._allocated: Dict[str, set] = {}
@@ -45,13 +51,17 @@ class PagePool:
 
     def _ensure_capacity(self, dt: str, n: int):
         if dt not in self._frames:
-            self._frames[dt] = np.zeros((0, self.page_elems),
+            self._frames[dt] = np.zeros((self.initial_frames, self.page_elems),
                                         dtype=self._np_dtype(dt))
-            self._free[dt] = []
+            self._free[dt] = list(range(self.initial_frames))
             self._allocated[dt] = set()
         while len(self._free[dt]) < n:
             old = self._frames[dt]
-            grow = max(self.grow_frames, n - len(self._free[dt]))
+            # geometric growth: each concatenate copies the whole pool, so
+            # growing by a constant amortizes to O(F^2) over a replay that
+            # churns thousands of instances — doubling keeps it O(F)
+            grow = max(self.grow_frames, n - len(self._free[dt]),
+                       old.shape[0])
             self._frames[dt] = np.concatenate(
                 [old, np.zeros((grow, self.page_elems),
                                dtype=old.dtype)])
@@ -155,8 +165,11 @@ class PagePool:
     def write_pages(self, dtype, frames, pages) -> None:
         dt = self._dt(dtype)
         idx = np.asarray(frames, np.int32)
-        self._frames[dt][idx] = np.asarray(
-            pages.astype(dt) if hasattr(pages, "astype") else pages)
+        if isinstance(pages, np.ndarray) and pages.dtype == self._frames[dt].dtype:
+            self._frames[dt][idx] = pages      # host fast path: no copy/cast
+        else:
+            self._frames[dt][idx] = np.asarray(
+                pages.astype(dt) if hasattr(pages, "astype") else pages)
 
     def write_rows(self, dtype, frames, slots, rows, row_elems: int) -> None:
         """In-place row update within pages: frames (B,), slots (B,),
@@ -172,6 +185,17 @@ class PagePool:
         dt = self._dt(dtype)
         idx = np.asarray(frames, np.int32)
         return jnp.asarray(self._frames[dt][idx])
+
+    def read_pages_host(self, dtype, frames) -> np.ndarray:
+        """Gather frames -> (n, page_elems) as a HOST array (no device
+        transfer).  This is what moves on the wire: the RNIC analogue DMAs
+        physical frames, and the payload only becomes a device tensor at
+        assembly time (``ensure_tensor``).  Fleet-scale replays fork tens of
+        thousands of children; the paging fast path must not pay a device
+        round trip per fault."""
+        dt = self._dt(dtype)
+        idx = np.asarray(frames, np.int32)
+        return self._frames[dt][idx]
 
     def frames_array(self, dtype) -> jax.Array:
         """Expose raw physical frames (what the RNIC reads)."""

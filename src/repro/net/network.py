@@ -157,6 +157,13 @@ class Network:
         link — the hot-spot signal the Router and schedulers act on."""
         return max(0.0, self.link_free(node_id) - self.sim_time)
 
+    def backlog_snapshot(self) -> Dict[str, float]:
+        """{node_id: seconds of queued wire time} for every node that has a
+        lane ledger — the per-node hot-spot view replay timelines sample.
+        Nodes that never moved a byte have no ledger and are omitted (the
+        lane dicts are lazy precisely so fleet-scale clusters stay cheap)."""
+        return {nid: self.link_backlog(nid) for nid in self._link_busy}
+
     def occupy_link(self, node_id: str, until: float) -> None:
         """Hold ``node_id``'s earliest-free lane until ``until`` (absolute).
         Transports call this for both endpoints of every transfer; a no-op

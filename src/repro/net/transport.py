@@ -164,7 +164,9 @@ class Transport(abc.ABC):
         # time instead of charged to sim_time (the sync path pays it up
         # front, exactly as before)
         setup = self._setup(src, dst, defer=async_read)
-        pages = node.pool.read_pages(dtype, frames)
+        # the wire payload is HOST memory (the RNIC DMAs physical frames);
+        # device materialization happens at tensor assembly, not per fault
+        pages = node.pool.read_pages_host(dtype, frames)
         nbytes = pages.size * pages.dtype.itemsize
         sges = contiguous_runs(frames)
         ops = max(1, math.ceil(sges / self.max_sge))

@@ -14,7 +14,7 @@ per-channel backlog should decide where a fork lands.
 * :class:`TransportAwareScheduler` — scores each candidate against the
   seed's route demand ((owner, transport) pairs): unconnected
   connection-oriented fabrics charge their setup estimate (observed
-  amortized cost from ``Network.per_backend()`` when available, the
+  amortized cost from the per-backend setup meters when available, the
   backend's static ``setup_cost()`` otherwise) and busy channels charge
   their backlog.  Ties fall back to the round-robin order, so with no
   demand context it degrades to exactly the deterministic rotation.
@@ -89,9 +89,13 @@ class TransportAwareScheduler(RoundRobinScheduler):
         t = self.net.transport_obj(name)
         if not t.connection_oriented:
             return 0.0
-        observed = self.net.per_backend().get(name, {})
-        if observed.get("setups"):
-            return observed["setup_s"] / observed["setups"]
+        # read the two meter keys directly: per_backend() materializes a
+        # dict for EVERY registered backend, and this estimate runs once
+        # per candidate node per pick — at replay scale (thousands of
+        # nodes x 1e5 invocations) that dict build dominated scheduling
+        setups = self.net.meter.get(f"{name}.setups", 0)
+        if setups:
+            return self.net.meter.get(f"{name}.setup_s", 0.0) / setups
         return t.setup_cost()
 
     def score(self, node_id: str, demand: Sequence[tuple]) -> float:

@@ -67,10 +67,19 @@ class Coordinator:
     def __init__(self, network, nodes: List[NodeRuntime], clock=time.monotonic,
                  scheduler=None, seed_replicas: int = 1,
                  seed_placement: Optional[PlacementPolicy] = None,
-                 reroute_backlog: Optional[float] = None):
+                 reroute_backlog: Optional[float] = None,
+                 cache_keepalive: float = DEFAULT_CACHE_KEEPALIVE,
+                 auto_seed: bool = True):
         self.network = network
         self.nodes = {n.node_id: n for n in nodes}
         self.clock = clock
+        # how long a released container stays warm before gc() frees it —
+        # the keep-warm TTL knob autoscaler policies (repro.sim) tune
+        self.cache_keepalive = cache_keepalive
+        # §6.2 registers the first coldstart container platform-wide as the
+        # function's seed; pure-caching baselines turn that off so a
+        # no-MITOSIS control run holds no seed state at all
+        self.auto_seed = auto_seed
         self.functions: Dict[str, FunctionDef] = {}
         self.seed_store: Dict[str, Seed] = {}          # func -> seed record
         self.fork_trees: Dict[str, ForkTreeNode] = {}
@@ -127,7 +136,7 @@ class Coordinator:
         params = fdef.make_params()
         inst = ModelInstance.create(node, fdef.arch, params, kind="weights")
         # §6.2: cache only the FIRST coldstart container platform-wide as seed
-        if func not in self.seed_store:
+        if self.auto_seed and func not in self.seed_store:
             self.deploy_seed(func, node, instance=inst,
                              replicas=self.seed_replicas,
                              placement=self.seed_placement)
@@ -353,7 +362,7 @@ class Coordinator:
         for func, pool in self.cached.items():
             keep = []
             for inst, ts in pool:
-                if now - ts >= DEFAULT_CACHE_KEEPALIVE:
+                if now - ts >= self.cache_keepalive:
                     if inst.aspace and not self._pinned_as_seed(inst):
                         inst.free()
                     freed["cached"] += 1

@@ -45,10 +45,14 @@ class NodeRuntime:
     def __init__(self, node_id: str, network, page_elems: int = PAGE_ELEMS,
                  cache_enabled: bool = False, clock=time.monotonic,
                  page_cache_cap: int = DEFAULT_PAGE_CACHE_CAP,
-                 page_cache_cap_bytes: Optional[int] = None):
+                 page_cache_cap_bytes: Optional[int] = None,
+                 pool_frames: int = 0):
         self.node_id = node_id
         self.network = network
-        self.pool = PagePool(page_elems)
+        # pool_frames pre-reserves physical-frame capacity (lazily zeroed),
+        # so replay clusters that churn thousands of containers never pay
+        # pool-growth copies mid-run
+        self.pool = PagePool(page_elems, initial_frames=pool_frames)
         self.clock = clock
         self.instances: Dict[int, "object"] = {}
         self.seeds: Dict[int, SeedEntry] = {}
@@ -188,7 +192,7 @@ class NodeRuntime:
                            for f in idx.tolist()], bool)
         out = np.zeros((idx.size, self.pool.page_elems), dtype=jnp.dtype(dt))
         if live.any():
-            out[live] = np.asarray(self.pool.read_pages(dtype, idx[live]))
+            out[live] = self.pool.read_pages_host(dtype, idx[live])
         for i in np.nonzero(~live)[0]:
             out[i] = self._swapped[(dt, int(idx[i]))]
         return jnp.asarray(out)

@@ -1,0 +1,134 @@
+"""Autoscaler policy units: KeepWarm TTL/LIFO/budget, Hybrid spill order,
+reclaim-under-spike — driven against a real (unstarted) ReplayEngine."""
+import pytest
+
+from repro.sim import (ForkOnDemand, Hybrid, Invocation, KeepWarm,
+                       ReplayEngine, SimFunction, Trace)
+
+FN = "f"
+
+
+def make_engine(policy, minutes=(1,), **fn_kw):
+    fn_kw.setdefault("state_bytes", 16 * 1024)
+    fn_kw.setdefault("touch_frac", 0.25)
+    eng = ReplayEngine(Trace("unit", {FN: tuple(minutes)}), policy,
+                       [SimFunction(FN, **fn_kw)], n_nodes=4, seed=0,
+                       page_elems=1024)
+    policy.on_start(eng)
+    return eng
+
+
+def inv(i=0, t=0.0):
+    return Invocation(t, FN, i)
+
+
+def pool_of(eng):
+    return eng.coord.cached.get(FN, [])
+
+
+# -- KeepWarm ----------------------------------------------------------------
+
+def test_keepwarm_prewarm_then_warm_hits():
+    policy = KeepWarm(ttl=60.0, prewarm=2)
+    eng = make_engine(policy)
+    assert len(pool_of(eng)) == 2
+    kind, inst = policy.acquire(eng, inv())
+    assert kind == "warm" and inst.aspace
+    assert len(pool_of(eng)) == 1
+
+
+def test_keepwarm_ttl_expiry_via_platform_gc():
+    policy = KeepWarm(ttl=60.0, prewarm=2)
+    eng = make_engine(policy)
+    assert eng.coord.cache_keepalive == 60.0
+    eng.net.sim_time = 61.0              # sim clock, not wall clock
+    freed = eng.coord.gc()
+    assert freed["cached"] == 2
+    assert pool_of(eng) == []
+    kind, _ = policy.acquire(eng, inv())
+    assert kind == "cold"                # nothing warm survived the TTL
+
+
+def test_keepwarm_reuse_is_lifo():
+    policy = KeepWarm(ttl=300.0)
+    eng = make_engine(policy)
+    k1, first = policy.acquire(eng, inv(0))
+    k2, second = policy.acquire(eng, inv(1))
+    assert (k1, k2) == ("cold", "cold")
+    policy.release(eng, inv(0), first)       # parked first (oldest)
+    eng.net.sim_time = 1.0
+    policy.release(eng, inv(1), second)      # parked last (most recent)
+    kind, got = policy.acquire(eng, inv(2))
+    assert kind == "warm"
+    assert got.instance_id == second.instance_id   # LIFO: newest serves
+
+
+def test_keepwarm_budget_evicts_oldest_first():
+    policy = KeepWarm(ttl=300.0, budget=1)
+    eng = make_engine(policy)
+    _, a = policy.acquire(eng, inv(0))
+    _, b = policy.acquire(eng, inv(1))
+    policy.release(eng, inv(0), a)
+    eng.net.sim_time = 1.0
+    policy.release(eng, inv(1), b)           # pool over budget -> evict a
+    pool = pool_of(eng)
+    assert len(pool) == 1
+    assert pool[0][0].instance_id == b.instance_id
+    assert not a.aspace                      # the evicted container was freed
+    evicted = eng.telemetry.of_kind("evicted")
+    assert evicted and evicted[0]["count"] == 1
+
+
+def test_keepwarm_reclaim_under_spike_pool_drains_then_refills():
+    """A burst checks out every warm container (occupancy!), forcing colds;
+    completions re-park them and the pool recovers."""
+    policy = KeepWarm(ttl=300.0, prewarm=2)
+    eng = make_engine(policy)
+    served = [policy.acquire(eng, inv(i)) for i in range(4)]
+    kinds = [k for k, _ in served]
+    assert kinds == ["warm", "warm", "cold", "cold"]
+    assert pool_of(eng) == []                # drained under the spike
+    for i, (_k, inst) in enumerate(served):
+        policy.release(eng, inv(i), inst)
+    assert len(pool_of(eng)) == 4            # all re-parked after completion
+
+
+# -- Hybrid ------------------------------------------------------------------
+
+def test_hybrid_spill_ordering_warm_then_fork_then_release_paths():
+    policy = Hybrid(pool=1, ttl=300.0, prefetch=0)
+    eng = make_engine(policy)
+    k1, warm_inst = policy.acquire(eng, inv(0))
+    assert k1 == "warm" and not warm_inst.ancestry
+    k2, fork_inst = policy.acquire(eng, inv(1))
+    assert k2 == "fork" and fork_inst.ancestry   # pool empty -> real fork
+    # fork children are freed on release, never cached (§6.2)
+    policy.release(eng, inv(1), fork_inst)
+    assert pool_of(eng) == []
+    assert not fork_inst.aspace
+    # warm containers go back to the (bounded) pool
+    policy.release(eng, inv(0), warm_inst)
+    assert len(pool_of(eng)) == 1
+
+
+def test_hybrid_without_spill_falls_to_cold():
+    policy = Hybrid(pool=1, ttl=300.0, spill_to_fork=False)
+    eng = make_engine(policy)
+    policy.acquire(eng, inv(0))              # drains the pool
+    kind, inst = policy.acquire(eng, inv(1))
+    assert kind == "cold" and not inst.ancestry
+
+
+# -- ForkOnDemand ------------------------------------------------------------
+
+def test_fork_on_demand_deploys_replicas_and_renews():
+    policy = ForkOnDemand(replicas=2, lease=600.0, renew_every=60.0,
+                          prefetch=0)
+    eng = make_engine(policy)
+    seed = eng.coord.seed_store[FN]
+    assert len(list(seed.parent_nodes)) == 2
+    kind, inst = policy.acquire(eng, inv(0))
+    assert kind == "fork" and inst.ancestry
+    eng.net.sim_time = 61.0
+    policy.acquire(eng, inv(1))              # traffic-driven renewal fires
+    assert eng.coord.lease_telemetry[FN]["renewals"] >= 1

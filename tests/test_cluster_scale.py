@@ -1,0 +1,68 @@
+"""Fleet-scale cluster construction: O(n) build, lazy link state, and
+amortized pool growth — what lets replays run thousands of sim nodes."""
+import time
+
+import numpy as np
+
+import repro.memory.pool as pool_mod
+from benchmarks.common import make_cluster
+from repro.memory.pool import PagePool
+
+
+def test_make_cluster_builds_1000_nodes_with_sim_clock():
+    net, nodes = make_cluster(1000, clock="sim")
+    assert len(nodes) == 1000
+    # per-node lane ledgers and per-pair channels are lazy: none exist
+    # before any traffic, so construction does no O(n^2) wiring
+    assert len(net._link_busy) == 0
+    assert nodes[0].clock() == net.sim_time
+    net.sim_time = 42.0
+    assert nodes[-1].clock() == 42.0
+
+
+def _build_time(n):
+    t0 = time.perf_counter()
+    make_cluster(n, clock="sim")
+    return time.perf_counter() - t0
+
+
+def test_cluster_build_time_is_sublinear_in_pairs():
+    """t(4x nodes) must stay near 4x t(x) — quadratic (per-pair) setup
+    would make it ~16x.  Generous bound for CI noise."""
+    t200 = min(_build_time(200) for _ in range(3))
+    t800 = min(_build_time(800) for _ in range(3))
+    assert t800 / max(t200, 1e-9) < 10.0
+
+
+def test_pool_growth_is_amortized(monkeypatch):
+    """Allocating N frames one at a time triggers O(log N) pool copies
+    (geometric growth), not O(N / grow_frames)."""
+    calls = []
+    real = np.concatenate
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pool_mod.np, "concatenate", counting)
+    pool = PagePool(page_elems=64)
+    n = 4000
+    for _ in range(n):
+        pool.alloc("float32", 1)
+    assert pool.num_allocated("float32") == n
+    assert len(calls) <= int(np.log2(n)) + 2
+
+
+def test_initial_frames_reserve_skips_growth_copies(monkeypatch):
+    calls = []
+    real = np.concatenate
+
+    def counting(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(pool_mod.np, "concatenate", counting)
+    pool = PagePool(page_elems=64, initial_frames=4096)
+    for _ in range(4096):
+        pool.alloc("float32", 1)
+    assert not calls                     # the reserve absorbed every alloc

@@ -1,0 +1,223 @@
+"""repro.sim: event loop, traces, and end-to-end replay determinism."""
+import numpy as np
+import pytest
+
+from repro.sim import (ColdStart, EventLoop, ForkOnDemand, KeepWarm,
+                       ReplayEngine, SimClock, SimFunction, Trace,
+                       correlated_spikes, load_azure_csv, multi_function,
+                       spike_660323)
+from repro.net import Network
+
+SEED = 7
+
+
+def spike(scale=1):
+    return spike_660323(scale=scale, func="f")
+
+
+def small_fn(**kw):
+    kw.setdefault("state_bytes", 16 * 1024)
+    kw.setdefault("touch_frac", 0.25)
+    kw.setdefault("hold_s", 60.0)
+    return SimFunction("f", **kw)
+
+
+def replay(policy, trace, seed=SEED, n_nodes=8, fn=None, **kw):
+    eng = ReplayEngine(trace, policy, [fn or small_fn()], n_nodes=n_nodes,
+                       seed=seed, page_elems=1024, **kw)
+    return eng, eng.run()
+
+
+# -- event loop --------------------------------------------------------------
+
+def test_event_loop_orders_by_time_then_schedule():
+    loop = EventLoop(seed=0)
+    seen = []
+    loop.at(2.0, seen.append, "late")
+    loop.at(1.0, seen.append, "a")
+    loop.at(1.0, seen.append, "b")       # same time: schedule order wins
+    loop.run()
+    assert seen == ["a", "b", "late"]
+    assert loop.events_run == 3
+
+
+def test_event_loop_rejects_negative_time_and_bad_interval():
+    loop = EventLoop(seed=0)
+    with pytest.raises(ValueError):
+        loop.at(-1.0, lambda: None)
+    with pytest.raises(ValueError):
+        loop.every(0.0, lambda: None, until=10.0)
+
+
+def test_every_is_bounded_by_until():
+    loop = EventLoop(seed=0)
+    ticks = []
+    loop.every(10.0, lambda: ticks.append(loop.now), until=35.0)
+    loop.run()
+    assert ticks == [10.0, 20.0, 30.0]
+    assert loop.pending() == 0           # housekeeping cannot run forever
+
+
+def test_loop_synchronizes_network_clock():
+    net = Network()
+    loop = EventLoop(net, seed=0)
+    times = []
+    loop.at(5.0, lambda: times.append(net.sim_time))
+    loop.at(3.0, lambda: times.append(net.sim_time))
+    loop.run()
+    assert times == [3.0, 5.0]
+    assert SimClock(net)() == net.sim_time
+
+
+# -- traces ------------------------------------------------------------------
+
+def test_spike_trace_shape_and_scaling():
+    tr = spike_660323()
+    assert tr.total_invocations() == 201
+    assert tr.peak_per_minute() == 120
+    assert tr.minutes == 12 and tr.duration_s == 720.0
+    assert spike_660323(scale=3).total_invocations() == 603
+
+
+def test_arrivals_are_deterministic_sorted_and_jittered():
+    import random
+    tr = multi_function([spike_660323(func="a"), spike_660323(func="b")])
+    a1 = tr.arrivals(random.Random(5))
+    a2 = tr.arrivals(random.Random(5))
+    assert a1 == a2
+    assert a1 != tr.arrivals(random.Random(6))
+    ts = [inv.t for inv in a1]
+    assert ts == sorted(ts)
+    assert [inv.idx for inv in a1] == list(range(len(a1)))
+    # jitter stays inside each arrival's minute
+    for inv in a1:
+        assert 0.0 <= inv.t <= tr.duration_s
+
+
+def test_multi_function_rejects_duplicates():
+    with pytest.raises(ValueError, match="duplicate"):
+        multi_function([spike_660323(func="a"), spike_660323(func="a")])
+
+
+def test_correlated_spikes_stagger():
+    tr = correlated_spikes(n_functions=3, stagger_minutes=2)
+    assert tr.functions == ["fn000", "fn001", "fn002"]
+    peaks = {f: tr.per_minute[f].index(120) for f in tr.functions}
+    assert peaks["fn001"] - peaks["fn000"] == 2
+    assert peaks["fn002"] - peaks["fn001"] == 2
+
+
+def test_load_azure_csv(tmp_path):
+    p = tmp_path / "trace.csv"
+    p.write_text("HashFunction,1,2,3\n"
+                 "aaaaaaaabbbbbbbb,1,40,2\n"
+                 "ccccccccdddddddd,0,1,0\n")
+    tr = load_azure_csv(str(p))
+    assert tr.functions == ["aaaaaaaa", "cccccccc"]
+    assert tr.per_minute["aaaaaaaa"] == (1, 40, 2)
+    assert load_azure_csv(str(p), top=1).functions == ["aaaaaaaa"]
+    assert load_azure_csv(str(p), minutes=2).minutes == 2
+    with pytest.raises(ValueError, match="not found"):
+        load_azure_csv(str(p), functions=["nope"])
+
+
+# -- determinism -------------------------------------------------------------
+
+def test_replay_is_deterministic_under_fixed_seed():
+    tr = spike(scale=2)
+    _, r1 = replay(ForkOnDemand(replicas=2, prefetch=0), tr)
+    _, r2 = replay(ForkOnDemand(replicas=2, prefetch=0), tr)
+    assert r1.event_log_digest == r2.event_log_digest
+    assert r1.summary() == r2.summary()
+    assert r1.digest() == r2.digest()
+
+
+def test_replay_digest_changes_with_seed():
+    tr = spike(scale=2)
+    _, r1 = replay(ForkOnDemand(prefetch=0), tr, seed=1)
+    _, r2 = replay(ForkOnDemand(prefetch=0), tr, seed=2)
+    assert r1.event_log_digest != r2.event_log_digest
+
+
+def test_fork_path_moves_real_pages():
+    """No analytical shortcut: the fork rows' latency comes from actual
+    wire traffic charged by the data plane."""
+    eng, res = replay(ForkOnDemand(prefetch=0), spike())
+    assert res.decisions.get("fork", 0) == res.invocations
+    assert res.payload_pages["pages_rdma"] >= res.invocations
+    assert eng.net.meter["dct.bytes"] > 0
+    # end-to-end latency >= startup latency >= 0 for every invocation
+    assert res.latency["all"]["p99_us"] >= res.startup["all"]["p99_us"] >= 0
+
+
+# -- leases, GC, memory ------------------------------------------------------
+
+def idle_gap_trace(gap_minutes=11):
+    return Trace("gap", {"f": (2,) + (0,) * gap_minutes + (3,)})
+
+
+def test_seed_lease_expires_end_to_end():
+    """An idle function stops renewing; its seed ages out via the replay's
+    GC events on the sim clock, and the next arrival cold-boots (and
+    re-seeds) — all surfaced in telemetry."""
+    policy = ForkOnDemand(replicas=1, lease=120.0, renew_every=60.0)
+    eng, res = replay(policy, idle_gap_trace())
+    assert res.decisions["fork"] >= 2        # minute-0 traffic forks
+    assert res.decisions["cold"] >= 1        # post-gap arrival found no seed
+    gc_sweeps = res.telemetry.of_kind("gc")
+    assert sum(r["seeds"] for r in gc_sweeps) >= 1
+    assert res.lease["f"]["expiries"] >= 1
+    # after the cold-boot fallback the seed is live again
+    assert "f" in eng.coord.seed_store
+
+
+def test_expired_seed_found_at_acquire_is_refreshed():
+    """With GC off and renewals rarer than the lease, the post-gap arrival
+    itself discovers the expired seed: acquire falls back to a cold boot
+    that re-seeds, and the policy telemeters the refresh."""
+    policy = ForkOnDemand(replicas=1, lease=30.0, renew_every=1e6)
+    eng, res = replay(policy, Trace("gap", {"f": (2, 0, 3)}), gc_every=1e6)
+    assert res.decisions["cold"] >= 1
+    assert res.telemetry.of_kind("seed_refresh")
+    assert "f" in eng.coord.seed_store
+
+
+def test_gc_is_idempotent_mid_replay():
+    eng, res = replay(KeepWarm(ttl=30.0), spike())
+    eng.net.sim_time = res.end_time + 1000.0
+    first = eng.coord.gc()
+    second = eng.coord.gc()
+    assert second["seeds"] == 0 and second["cached"] == 0
+    assert second["dangling"] == 0
+    assert first["seeds"] >= 0               # first sweep may reclaim
+
+
+def test_gc_telemetry_reaches_engine():
+    _, res = replay(KeepWarm(ttl=60.0), spike())
+    s = res.summary()
+    assert s["gc"]["sweeps"] > 0
+    assert s["gc"]["cached_expired"] > 0     # idle tail of the spike expired
+
+
+def test_keepwarm_memory_dwarfs_fork_memory():
+    tr = spike()
+    _, fork = replay(ForkOnDemand(replicas=2, prefetch=0), tr)
+    _, warm = replay(KeepWarm(ttl=60.0, prewarm=2), tr)
+    assert warm.memory.peak_total() > 2 * fork.memory.peak_total()
+    assert warm.memory.peak_node() > fork.memory.peak_node()
+    # timelines are sampled in sim time, not wall time
+    assert all(0.0 <= t <= warm.end_time + 1000.0
+               for t, *_ in warm.memory.samples)
+
+
+def test_coldstart_control_never_forks():
+    _, res = replay(ColdStart(), spike())
+    assert res.decisions == {"cold": 201}
+    assert res.payload_pages.get("pages_rdma", 0) == 0
+    assert res.latency["all"]["p50_us"] >= 167000
+
+
+def test_unknown_trace_function_rejected():
+    with pytest.raises(ValueError, match="unknown function"):
+        ReplayEngine(Trace("t", {"ghost": (1,)}), ColdStart(), [small_fn()],
+                     n_nodes=2)

@@ -1,0 +1,49 @@
+"""Property tests over the replay engine (skipped without hypothesis)."""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.sim import ForkOnDemand, ReplayEngine, SimFunction, Trace  # noqa: E402
+
+PAGES = 8            # pages per container at page_elems=1024 (32 KiB fp32)
+TOUCH = 0.5          # handler touches 4 of them, every invocation
+
+
+def fork_replay(replicas, seed, n_nodes, counts):
+    trace = Trace("prop", {"f": counts})
+    fn = SimFunction("f", state_bytes=PAGES * 1024 * 4, touch_frac=TOUCH,
+                     hold_s=60.0)
+    eng = ReplayEngine(trace, ForkOnDemand(replicas=replicas, prefetch=0),
+                       [fn], n_nodes=n_nodes, seed=seed, page_elems=1024)
+    return eng, eng.run()
+
+
+@settings(max_examples=12, deadline=None)
+@given(replicas=st.sampled_from([1, 2, 4]),
+       seed=st.integers(0, 2**16),
+       n_nodes=st.sampled_from([4, 9, 16]),
+       counts=st.lists(st.integers(0, 6), min_size=1, max_size=4)
+       .filter(lambda c: sum(c) > 0).map(tuple))
+def test_fork_bytes_moved_policy_invariant(replicas, seed, n_nodes, counts):
+    """At a fixed touch ratio, ForkOnDemand moves exactly
+    touched-pages-per-child * children payload pages — independent of the
+    replica count, the arrival jitter seed and the cluster size.  Sharding
+    and placement may change WHERE pages come from, never HOW MANY."""
+    eng, res = fork_replay(replicas, seed, n_nodes, counts)
+    touched = max(1, round(PAGES * TOUCH))
+    wire = res.payload_pages["pages_rdma"] + res.payload_pages["pages_rpc"]
+    assert res.decisions.get("fork", 0) == res.invocations
+    assert wire + res.payload_pages["pages_cached"] \
+        == touched * res.invocations
+    # the meter agrees with the per-instance stats it aggregates
+    page_bytes = 1024 * 4
+    assert eng.net.meter["dct.bytes"] >= wire * page_bytes
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_arrival_schedule_reproducible_across_engines(seed):
+    t1 = Trace("p", {"f": (3, 1)})
+    import random
+    assert t1.arrivals(random.Random(seed)) == t1.arrivals(random.Random(seed))
