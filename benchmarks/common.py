@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import io
+import json
 import pickle
 import time
 from typing import Callable, Dict, List, Optional
@@ -121,6 +122,24 @@ def restore_from_blob(node, arch: str, blob: bytes) -> ModelInstance:
     data = pickle.loads(blob)
     tree = {k: jnp.asarray(v) for k, v in data.items()}
     return ModelInstance.create(node, arch, tree)
+
+
+def merge_bench_json(path: str, updates: Dict[str, object]) -> dict:
+    """Read-merge-write a tracked BENCH artifact.  Several benchmarks pin
+    sections into one file (fig14 owns the fan-out sweeps, fig18 the
+    connection ablation in ``BENCH_fanout.json``): each owns its own
+    top-level keys and must preserve everyone else's — a whole-file dump
+    from one benchmark would silently drop the others' pinned numbers."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        data = {}
+    data.update(updates)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return data
 
 
 def fmt_csv(rows: List[dict]) -> str:

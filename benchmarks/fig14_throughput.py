@@ -247,7 +247,9 @@ def run_sweeps(write_json=None):
     single = [by_sk[(1, k)] for k in CONTENTION_K]
     kmax = CONTENTION_K[-1]
     summary = {
-        "schema": "fanout-bench/v2",
+        # v3: BENCH_fanout.json gained fig18's "conn" section (connection
+        # control-plane ablation); writers merge instead of overwrite
+        "schema": "fanout-bench/v3",
         "rows": rows,
         "sharded": {
             "children": SHARD_K,
@@ -298,13 +300,13 @@ def run_sweeps(write_json=None):
     }
     if write_json:
         # wall time is machine noise — the tracked artifact keeps only the
-        # deterministic sim/meter fields so diffs mean real regressions
+        # deterministic sim/meter fields so diffs mean real regressions;
+        # merge-write so fig18's pinned "conn" section survives
+        from benchmarks.common import merge_bench_json
         tracked = dict(summary)
         tracked["rows"] = [{k: v for k, v in r.items() if k != "us_per_call"}
                            for r in rows]
-        with open(write_json, "w") as f:
-            json.dump(tracked, f, indent=2, sort_keys=True)
-            f.write("\n")
+        merge_bench_json(write_json, tracked)
     return rows, summary
 
 

@@ -1,21 +1,33 @@
 """Figure 18: optimization ladder — +lean executor (GL), +one-sided
 descriptor fetch (FD), +DCT transport, +no-copy page mapping, +prefetch —
-plus a transport sweep across every backend in the repro.net registry.
+plus a transport sweep across every backend in the repro.net registry,
+plus the connection control-plane ablation (Swift-style setup storms).
 
 All transport selection happens purely by registry name through
 ``ForkPolicy(page_fetch=..., descriptor_fetch=...)``; the sweep doubles as
 the CI metering smoke (``python -m benchmarks.fig18_ablation --smoke``):
 a backend that moves bytes without charging its per-backend meter keys
 fails the run.
+
+The connection rows (``fig18.conn.*``) exercise the bounded QP pools
+(``NetModel.conn_cap``), the RC-vs-DCT structural difference under a
+1k-child cold fan-out, and the LRU eviction-churn regime; ``--smoke``
+pins them into ``BENCH_fanout.json`` under the ``conn`` key (merged, so
+fig14's sections survive) and fails unless throughput degrades
+monotonically as the cap shrinks below the fan-out degree at equal
+bytes, DCT beats cold RC, and setup-aware placement recovers most of
+the RC gap.
 """
 from __future__ import annotations
 
 import argparse
 
-from benchmarks.common import (deploy_parent, make_cluster, timed,
-                               touch_fraction)
+from benchmarks.common import (deploy_parent, make_cluster, merge_bench_json,
+                               timed, touch_fraction)
 from repro.fork import ForkPolicy
-from repro.net import transport_names
+from repro.net import NetModel, Network, transport_names
+from repro.placement import TransportAwareScheduler
+from repro.platform.node import NodeRuntime
 
 TOUCH = 0.6
 
@@ -96,21 +108,164 @@ def sweep_rows(fname: str, touch: float = TOUCH):
     return rows
 
 
+# ---------------------------------------------------------------------------
+# connection control-plane ablation (fig18.conn.*)
+# ---------------------------------------------------------------------------
+
+CONN_PAGES = 16          # x 64 elems x float32 = 4 KiB per read
+
+
+def _conn_cluster(cap: int, transport: str = "rc"):
+    """One owner with a frame pool; children are pure initiator ids (the
+    pool manager tracks their connection tables by node id, no runtime
+    needed on the read side)."""
+    net = Network(model=NetModel(conn_cap=cap), transport=transport)
+    owner = NodeRuntime("owner", net, page_elems=64)
+    key = net.create_dc_target("owner")
+    return net, owner, key
+
+
+def conn_cap_rows(caps=(0, 8, 6, 4, 2)):
+    """Bounded-pool sweep: 8 children replay a reuse-distance ladder
+    (2 passes over the first m children, m = 2, 4, 6, 8) against one
+    owner over RC.  Bytes moved are identical for every cap; only the
+    control plane differs — a cap at or above the fan-out degree pays 8
+    setups total, and each step below it turns part of the ladder into
+    an LRU churn regime (evict + re-establish), so sim time must degrade
+    monotonically as the cap shrinks."""
+    rows = []
+    children = [f"child{i}" for i in range(8)]
+    for cap in caps:
+        net, owner, key = _conn_cluster(cap)
+        frames = owner.pool.alloc("float32", CONN_PAGES)
+        t0 = net.sim_time
+        for m in (2, 4, 6, 8):
+            for _ in range(2):
+                for c in children[:m]:
+                    net.read_pages(c, "owner", "float32", frames, key,
+                                   transport="rc")
+        rows.append(dict(
+            name=f"fig18.conn.cap{cap}", cap=cap,
+            sim_us=int(round((net.sim_time - t0) * 1e6)),
+            bytes=net.meter["rc.bytes"],
+            setups=net.meter["rc.setups"],
+            evicted=net.meter["rc.conn_evicted"],
+            reestablished=net.meter["rc.conn_reestablished"]))
+    return rows
+
+
+def conn_fanout_rows(n_children: int = 1000):
+    """Cold 1k-child fan-out, equal bytes per variant:
+
+    * ``dct`` — one shared DC initiator per child node, per-new-pair
+      piggybacked handshake (cheap control plane);
+    * ``rc``  — blind placement, one cold RC QP pair per child (the
+      Swift setup storm: 1000 x rc_setup dominates);
+    * ``rc_aware`` — same RC backend, but ``TransportAwareScheduler``
+      places each child from OBSERVED pool state, so after the first
+      child warms a QP every sibling packs onto it and the storm
+      collapses to one setup."""
+    rows = []
+    for label, tname, aware in (("dct", "dct", False), ("rc", "rc", False),
+                                ("rc_aware", "rc", True)):
+        net, owner, key = _conn_cluster(0, transport=tname)
+        frames = owner.pool.alloc("float32", CONN_PAGES)
+        t0 = net.sim_time
+        if aware:
+            workers = {f"w{i}": NodeRuntime(f"w{i}", net, page_elems=64)
+                       for i in range(n_children)}
+            sched = TransportAwareScheduler(net)
+            for _ in range(n_children):
+                node = sched.pick(workers, demand=[("owner", tname)])
+                net.read_pages(node.node_id, "owner", "float32", frames,
+                               key, transport=tname)
+        else:
+            for i in range(n_children):
+                net.read_pages(f"w{i}", "owner", "float32", frames, key,
+                               transport=tname)
+        rows.append(dict(
+            name=f"fig18.conn.fanout.{label}",
+            sim_us=int(round((net.sim_time - t0) * 1e6)),
+            bytes=net.meter[f"{tname}.bytes"],
+            setups=net.meter[f"{tname}.setups"]))
+    return rows
+
+
+def conn_summary():
+    """The pinned ``conn`` section of BENCH_fanout.json (and the smoke
+    gate's evidence): cap sweep + fan-out rows plus the derived claims."""
+    cap_rows = conn_cap_rows()
+    fan_rows = conn_fanout_rows()
+    by = {r["name"]: r for r in cap_rows + fan_rows}
+    bounded = [r for r in cap_rows if r["cap"] > 0]   # descending caps
+    rc = by["fig18.conn.fanout.rc"]
+    dct = by["fig18.conn.fanout.dct"]
+    aware = by["fig18.conn.fanout.rc_aware"]
+    return {
+        "schema": "conn-ablation/v1",
+        "rows": cap_rows + fan_rows,
+        "cap_equal_bytes": len({r["bytes"] for r in cap_rows}) == 1,
+        "cap_monotone": all(a["sim_us"] < b["sim_us"]
+                            for a, b in zip(bounded, bounded[1:])),
+        "cap_unbounded_matches_fanout_cap":
+            by["fig18.conn.cap0"]["sim_us"] == by["fig18.conn.cap8"]["sim_us"],
+        "churn": {"evicted": by["fig18.conn.cap2"]["evicted"],
+                  "reestablished": by["fig18.conn.cap2"]["reestablished"]},
+        "fanout_equal_bytes": len({r["bytes"] for r in fan_rows}) == 1,
+        "dct_beats_rc": dct["sim_us"] < rc["sim_us"],
+        "gap_recovered_pct": round(
+            100.0 * (rc["sim_us"] - aware["sim_us"])
+            / (rc["sim_us"] - dct["sim_us"]), 2),
+        "aware_setups": aware["setups"],
+    }
+
+
+def run_conn(write_json=None):
+    summary = conn_summary()
+    if write_json:
+        merge_bench_json(write_json, {"conn": summary})
+    return summary
+
+
 def run():
     rows = []
     for fname in ("json", "recognition"):
         rows.extend(ladder_rows(fname))
         rows.extend(sweep_rows(fname))
+    rows.extend(run_conn()["rows"])
     return rows
 
 
-def smoke():
+def smoke(write_json=None):
     """Quick mode for CI: one small function, tiny touch fraction, every
-    registered backend; fails loudly if any backend stops metering."""
+    registered backend; fails loudly if any backend stops metering.  Also
+    runs the connection ablation, pins it into ``write_json`` (merged),
+    and gates on the issue's acceptance claims."""
     rows = sweep_rows("json", touch=0.2)
     for r in rows:
         print(f"{r['name']}: sim {r['sim_us']} us, "
               f"{r['bytes']} B / {r['ops']} ops")
+    conn = run_conn(write_json)
+    for r in conn["rows"]:
+        print(f"{r['name']}: sim {r['sim_us']} us, {r['bytes']} B, "
+              f"{r['setups']} setups")
+    assert conn["cap_equal_bytes"] and conn["fanout_equal_bytes"], \
+        "conn ablation rows must move identical bytes"
+    assert conn["cap_monotone"], \
+        "sim time must degrade monotonically as the pool cap shrinks " \
+        "below the fan-out degree"
+    assert conn["cap_unbounded_matches_fanout_cap"], \
+        "a cap at the fan-out degree must behave like an unbounded pool"
+    assert conn["churn"]["evicted"] > 0 and \
+        conn["churn"]["reestablished"] > 0, \
+        "the tight-cap row must show LRU eviction churn"
+    assert conn["dct_beats_rc"], \
+        "DCT must beat blind RC on a cold 1k-child fan-out"
+    assert conn["gap_recovered_pct"] >= 90.0, \
+        f"setup-aware placement recovered only " \
+        f"{conn['gap_recovered_pct']}% of the RC gap"
+    print(f"conn: gap_recovered {conn['gap_recovered_pct']}%, "
+          f"churn {conn['churn']}")
     return rows
 
 
@@ -118,9 +273,11 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="quick all-transport metering check (CI)")
+    ap.add_argument("--json", default="BENCH_fanout.json",
+                    help="tracked artifact to merge the conn section into")
     args = ap.parse_args()
     if args.smoke:
-        smoke()
+        smoke(write_json=args.json)
     else:
         from benchmarks.common import fmt_csv
         print(fmt_csv(run()))

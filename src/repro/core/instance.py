@@ -41,6 +41,10 @@ class ModelInstance:
         self._tensor_versions: Dict[str, int] = {}
         self._owned_frames: Dict[str, list] = {}
         self.instance_id = node.new_instance_id()
+        # connection-pool identity: reads take a refcount on their
+        # (src, dst) connection under this name, so siblings landed on
+        # one node share a warm slot and free() releases exactly ours
+        self._conn_user = f"{node.node_id}/{self.instance_id}"
         # page-fetch transport name (repro.net registry); None = the
         # network's default backend.  Set from ForkPolicy.page_fetch; a
         # routed VMA's own `VMA.transport` takes precedence per VMA.
@@ -177,7 +181,8 @@ class ModelInstance:
             try:
                 data = self.node.network.read_pages(
                     self.node.node_id, owner, vma.dtype, remote_frames, key,
-                    transport=vma.transport or self.page_transport)
+                    transport=vma.transport or self.page_transport,
+                    user=self._conn_user)
                 self.stats["pages_rdma"] += int(plist.size)
             except AccessRevoked:
                 # VA->PA changed at the owner (swap, reclaim): RPC fallback
@@ -327,4 +332,7 @@ class ModelInstance:
         self._tensors.clear()
         self._tensor_versions.clear()
         self.aspace = {}
+        # drop our connection refcounts: shared slots stay warm for
+        # surviving siblings but become LRU-evictable once unreferenced
+        self.node.network.conn_release_user(self._conn_user)
         self.node.instances.pop(self.instance_id, None)

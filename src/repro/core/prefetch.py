@@ -95,7 +95,8 @@ class PrefetchEngine:
                                       rframes, key,
                                       transport=vma.transport
                                       or inst.page_transport,
-                                      async_read=True)
+                                      async_read=True,
+                                      user=inst._conn_user)
             except AccessRevoked:
                 continue            # sync path will take the RPC fallback
             self._pending.setdefault(name, []).append(_Pending(

@@ -6,6 +6,8 @@ capability flags, per-backend metering) behind a name-keyed registry, with
 meter aggregation).  Built-in backends: ``dct``, ``rc``, ``rpc``,
 ``tpu_ici``, ``shared_fs`` — see ``docs/transport.md``.
 """
+from repro.net.conn import (ConnManager, ConnPool, Connection, DCTInitiator,
+                            DCTTarget, RCConnection)
 from repro.net.errors import AccessRevoked, LeaseExpired
 from repro.net.model import NetModel
 from repro.net.network import Network
@@ -17,7 +19,13 @@ from repro.net.backends import (DctTransport, RcTransport, RpcTransport,
 
 __all__ = [
     "AccessRevoked",
+    "ConnManager",
+    "ConnPool",
+    "Connection",
+    "DCTInitiator",
+    "DCTTarget",
     "LeaseExpired",
+    "RCConnection",
     "NetModel",
     "Network",
     "Transport",

@@ -31,6 +31,7 @@ class DctTransport(Transport):
     name = "dct"
     one_sided = True
     connection_oriented = True
+    conn_kind = "dc"               # one initiator/target context per node
     legacy_meter = "rdma"
     max_sge = 16                   # SGEs per doorbell-batched work request
 
@@ -51,6 +52,7 @@ class RcTransport(Transport):
     name = "rc"
     one_sided = True
     connection_oriented = True
+    conn_kind = "peer"             # one QP per (src, dst), slots both ends
     legacy_meter = "rdma"
     max_sge = 16
 

@@ -27,3 +27,7 @@ class NetModel:
                                     # fan-in queues on the parent link in
                                     # sim_time itself (<= 0 disables the link
                                     # clock: ledger-only legacy accounting)
+    conn_cap: int = 0               # per-node connection-table slots (QP/DC
+                                    # contexts a NIC holds); overflow evicts
+                                    # LRU and the pair re-pays setup on next
+                                    # use (<= 0 = unbounded, legacy behavior)

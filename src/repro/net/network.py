@@ -20,6 +20,7 @@ from collections import Counter
 from typing import Dict, Optional
 
 from repro.net import backends as _backends   # noqa: F401  (registers built-ins)
+from repro.net.conn import ConnManager
 from repro.net.errors import AccessRevoked
 from repro.net.model import NetModel
 from repro.net.transport import Transport, resolve_transport, transport_names
@@ -34,7 +35,14 @@ class Network:
         self.meter = Counter()
         self.sim_time = 0.0
         self._transports: Dict[str, Transport] = {}
-        self._connections = set()           # (transport, src, dst) live pairs
+        # the connection control plane: bounded per-node pools of typed
+        # connection objects (RC per-peer QPs vs DCT contexts), LRU
+        # eviction under NetModel.conn_cap, sibling sharing via per-user
+        # refcounts — see repro.net.conn / docs/connection.md
+        self.conns = ConnManager(self)
+        # per-node establishment busy-until stamps: how far ahead of the
+        # clock each node's control plane is committed (conn_backlog)
+        self._conn_busy: Dict[str, float] = {}
         # per-(src, dst) channel busy-until timestamps: overlapped (async)
         # transfers serialize against each other on their channel, not
         # against the sim clock
@@ -72,6 +80,9 @@ class Network:
         self.nodes.pop(node_id, None)
         for k in [k for k in self._dc_targets if k[0] == node_id]:
             del self._dc_targets[k]
+        # the node's connection table dies with it: every QP/DC context
+        # holding a slot there is torn down and peers re-pay setup
+        self.conns.drop_node(node_id)
 
     def require_node(self, node_id: str):
         node = self.nodes.get(node_id)
@@ -202,38 +213,70 @@ class Network:
             self.meter["async_wait_s"] += t - self.sim_time
             self.sim_time = t
 
-    # -- connections ------------------------------------------------------------
+    # -- connections (the clocked control plane) --------------------------------
 
     def note_connection(self, transport: str, src: str, dst: str) -> bool:
-        """Record a (src, dst) pair for ``transport``; True if it is new
-        (i.e. the caller owes the setup cost)."""
-        key = (transport, src, dst)
-        if key in self._connections:
-            return False
-        self._connections.add(key)
-        return True
+        """Admit the (src, dst) pair into the pools warm, without charging
+        the clock (an externally established connection); True if it was
+        new.  Tests and warm-import paths use this to pre-pay setup."""
+        return self.conns.acquire(self.transport_obj(transport),
+                                  src, dst) is not None
 
     def has_connection(self, transport: str, src: str, dst: str) -> bool:
-        """True iff the (src, dst) pair has already paid ``transport``'s
-        setup cost — what a transport-aware scheduler checks before
-        charging a candidate node the connect estimate."""
-        return (transport, src, dst) in self._connections
+        """True iff the (src, dst) path over ``transport`` is warm in the
+        pools *right now* — observed state, so an LRU-evicted pair reads
+        False again (and ``setup_owed`` prices its re-establishment)."""
+        return self.conns.has(transport, src, dst)
+
+    def setup_owed(self, transport: str, src: str, dst: str) -> float:
+        """Seconds the next (src, dst) op over ``transport`` will owe for
+        connection establishment, from observed pool state — what the
+        transport-aware scheduler and Router charge a candidate."""
+        return self.conns.setup_owed(transport or self.transport, src, dst)
+
+    def conn_release_user(self, user: str) -> None:
+        """Release every connection reference ``user`` (an instance)
+        holds: warm slots survive but become first in line for LRU
+        eviction under ``NetModel.conn_cap``."""
+        self.conns.release_user(user)
+
+    def reset_connections(self) -> None:
+        """Forget all connection state (tests/diagnostics): every pair
+        re-pays setup as if never connected."""
+        self.conns.reset()
+
+    def note_conn_busy(self, node_id: str, until: float) -> None:
+        """Stamp ``node_id``'s control plane busy until ``until`` —
+        establishment work committed ahead of (or at) the clock."""
+        if until > self._conn_busy.get(node_id, 0.0):
+            self._conn_busy[node_id] = until
+
+    def conn_backlog(self, node_id: str) -> float:
+        """Seconds of connection-establishment work still ahead of
+        ``sim_time`` at ``node_id`` — the setup-storm signal setup-aware
+        placement scores alongside ``link_backlog``."""
+        return max(0.0, self._conn_busy.get(node_id, 0.0) - self.sim_time)
 
     # -- data plane ---------------------------------------------------------------
 
     def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int,
-                   transport: Optional[str] = None, async_read: bool = False):
+                   transport: Optional[str] = None, async_read: bool = False,
+                   user: Optional[str] = None):
         """Read of `frames` from dst's pool over the named backend.
         ``async_read=True`` issues the read without blocking the sim clock
-        (it occupies the channel; completion = ``channel_busy(src, dst)``)."""
+        (it occupies the channel; completion = ``channel_busy(src, dst)``).
+        ``user`` (an instance identity) takes a refcount on the connection
+        so siblings on one node share a warm slot until freed."""
         return self.transport_obj(transport).read_pages(
-            src, dst, dtype, frames, dc_key, async_read=async_read)
+            src, dst, dtype, frames, dc_key, async_read=async_read,
+            user=user)
 
     def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int,
-                  transport: Optional[str] = None) -> None:
+                  transport: Optional[str] = None,
+                  user: Optional[str] = None) -> None:
         """Metered blob fetch (descriptor transfer), DC-key guarded."""
         return self.transport_obj(transport).read_blob(src, dst, nbytes,
-                                                       dc_key)
+                                                       dc_key, user=user)
 
     def rpc(self, src: str, dst: str, nbytes: int, fn, *args,
             transport: Optional[str] = None, **kwargs):
@@ -247,14 +290,18 @@ class Network:
         return dict(self.meter) | {"sim_time": self.sim_time}
 
     def per_backend(self) -> Dict[str, dict]:
-        """{backend: {bytes, ops, sges, async_ops, setups, setup_s}} for
-        every registered backend (zeros for backends this network never
-        used)."""
+        """{backend: {bytes, ops, sges, async_ops, setups, setup_s,
+        conn_live, conn_evicted, conn_reestablished}} for every registered
+        backend (zeros for backends this network never used).
+        ``conn_live`` is observed pool state (slots currently held);
+        the churn counters accumulate since the last ``reset_meter``."""
         out: Dict[str, dict] = {}
         for name in transport_names():
             out[name] = {k: self.meter.get(f"{name}.{k}", 0)
                          for k in ("bytes", "ops", "sges", "async_ops",
-                                   "setups", "setup_s")}
+                                   "setups", "setup_s", "conn_evicted",
+                                   "conn_reestablished")}
+            out[name]["conn_live"] = self.conns.live(name)
         return out
 
     def reset_meter(self) -> None:
@@ -263,3 +310,6 @@ class Network:
         self._channel_busy.clear()   # busy stamps are absolute on the clock
         self._link_busy.clear()
         self._node_busy.clear()
+        self._conn_busy.clear()      # ...and so are establishment stamps
+        # NOTE: connection pools survive a meter reset on purpose (warm
+        # state is not a meter); use reset_connections() to forget them

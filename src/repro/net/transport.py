@@ -88,6 +88,18 @@ def register_transport(cls: Type["Transport"]) -> Type["Transport"]:
         raise ValueError(
             f"transport {name!r} must define `max_sge` as an int >= 1 "
             f"(scatter-gather entries per doorbell op), got {max_sge!r}")
+    kind = getattr(cls, "conn_kind", None)
+    if getattr(cls, "connection_oriented", False):
+        if kind not in ("peer", "dc"):
+            raise ValueError(
+                f"connection-oriented transport {name!r} must declare "
+                f"`conn_kind` as 'peer' (per-pair QP, slots at both "
+                f"endpoints) or 'dc' (one initiator/target context per "
+                f"node), got {kind!r}")
+    elif kind is not None:
+        raise ValueError(
+            f"connectionless transport {name!r} must leave `conn_kind` as "
+            f"None, got {kind!r}")
     _REGISTRY[name] = cls
     return cls
 
@@ -117,6 +129,11 @@ class Transport(abc.ABC):
     name: ClassVar[str]
     one_sided: ClassVar[bool]                  # reads bypass the owner's CPU
     connection_oriented: ClassVar[bool] = False  # pays setup per (src, dst)
+    # pool shape for connection-oriented fabrics: "peer" = one QP per
+    # (src, dst) occupying a slot at BOTH endpoints (RC); "dc" = one
+    # initiator context per src + one target context per dst, each a
+    # single slot shared across every peer (DCT).  None = connectionless.
+    conn_kind: ClassVar[Optional[str]] = None
     legacy_meter: ClassVar[str]                # aggregate category: rdma|rpc|ici|dfs
     max_sge: ClassVar[int] = 16                # SGEs per doorbell-batched op
 
@@ -145,7 +162,7 @@ class Transport(abc.ABC):
     # -- data plane ---------------------------------------------------------
 
     def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int,
-                   async_read: bool = False):
+                   async_read: bool = False, user: Optional[str] = None):
         """Read ``frames`` out of dst's pool.  Admitted iff (dst, dc_key) is
         a live DC target — revoking the target kills access on EVERY backend.
 
@@ -163,7 +180,7 @@ class Transport(abc.ABC):
         # connection: the setup cost is folded into the transfer's channel
         # time instead of charged to sim_time (the sync path pays it up
         # front, exactly as before)
-        setup = self._setup(src, dst, defer=async_read)
+        setup = self._setup(src, dst, defer=async_read, user=user)
         # the wire payload is HOST memory (the RNIC DMAs physical frames);
         # device materialization happens at tensor assembly, not per fault
         pages = node.pool.read_pages_host(dtype, frames)
@@ -175,44 +192,72 @@ class Transport(abc.ABC):
                      ops=ops, sges=sges, async_read=async_read, setup=setup)
         return pages
 
-    def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int) -> None:
+    def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int,
+                  user: Optional[str] = None) -> None:
         """Metered fetch of an opaque blob (descriptor transfer).  Guarded by
         the blob's own DC key, exactly like a VMA."""
         self.net.require_node(dst)
         self.net.check_target(dst, dc_key)
-        self._setup(src, dst)
+        self._setup(src, dst, user=user)
         self._charge("read", src, dst, nbytes,
                      self.op_latency() + nbytes / self.bandwidth())
 
     def rpc(self, src: str, dst: str, nbytes: int, fn, *args, **kwargs):
-        """Two-sided call executed by the destination node (FaSST-style)."""
+        """Two-sided call executed by the destination node (FaSST-style).
+        Connection-oriented backends acquire the (src, dst) connection
+        from the pool here too — a two-sided call over RC still rides a
+        QP, so the control plane can no longer get free connections the
+        data plane would have had to pay for."""
         self.net.require_node(dst)
+        self._setup(src, dst)
         self._charge("rpc", src, dst, nbytes,
                      self.rpc_latency() + nbytes / self.bandwidth())
         return fn(*args, **kwargs)
 
     # -- metering -----------------------------------------------------------
 
-    def _setup(self, src: str, dst: str, defer: bool = False) -> float:
-        """Pay the one-time (src, dst) connection cost if it is still owed.
+    def _setup(self, src: str, dst: str, defer: bool = False,
+               user: Optional[str] = None) -> float:
+        """Acquire the (src, dst) connection from the pool, paying the
+        establishment cost if it is still owed.
 
-        A synchronous caller blocks the sim clock here (``defer=False``,
-        returns 0.0); an async caller gets the owed seconds back instead
-        (``defer=True``) and folds them into the transfer's channel time —
-        a cold connection must not stall the clock the async path exists
-        to keep moving.  Metering is identical either way."""
+        The pool (``net.conns``) decides whether a handshake is needed:
+        a warm slot (RC reuse, DCT amortization, sibling sharing) costs
+        nothing; a cold or evicted path owes the backend's setup cost and
+        the pair is re-admitted (possibly evicting an LRU slot under
+        ``NetModel.conn_cap``).
+
+        A synchronous caller is clocked here (``defer=False``, returns
+        0.0): establishment is a control-plane exchange on the wire, so
+        it occupies a link lane at both endpoints — a setup storm queues
+        on the NIC like payload traffic — and any stall behind busy lanes
+        is metered as ``channel_wait_s``.  An async caller gets the owed
+        seconds back instead (``defer=True``) and folds them into the
+        transfer's channel time — a cold connection must not stall the
+        clock the async path exists to keep moving.  Metering is
+        identical either way."""
         if not self.connection_oriented:
             return 0.0
-        if not self.net.note_connection(self.name, src, dst):
+        net = self.net
+        owed = net.conns.acquire(self, src, dst, user=user)
+        if owed is None:
             return 0.0
-        cost = self.setup_cost()
-        meter = self.net.meter
+        meter = net.meter
         meter["conn_setups"] += 1
         meter[f"{self.name}.setups"] += 1
-        meter[f"{self.name}.setup_s"] += cost
+        meter[f"{self.name}.setup_s"] += owed
         if defer:
-            return cost
-        self.net.sim_time += cost
+            return owed
+        start = max(net.sim_time, net.link_free(src), net.link_free(dst))
+        end = start + owed
+        net.occupy_link(src, end)
+        if dst != src:
+            net.occupy_link(dst, end)
+        net.note_conn_busy(src, end)
+        net.note_conn_busy(dst, end)
+        if start > net.sim_time:
+            meter["channel_wait_s"] += start - net.sim_time
+        net.sim_time = end
         return 0.0
 
     def _charge(self, kind: str, src: str, dst: str, nbytes: int,
@@ -242,6 +287,12 @@ class Transport(abc.ABC):
         start = max(net.sim_time, net.channel_busy(src, dst),
                     net.link_free(src), net.link_free(dst))
         end = start + setup + seconds
+        if setup > 0:
+            # deferred establishment rides the channel ahead of the
+            # payload: stamp it on both endpoints' conn-backlog clocks so
+            # setup-aware schedulers see the in-flight handshake
+            net.note_conn_busy(src, start + setup)
+            net.note_conn_busy(dst, start + setup)
         net.set_channel_busy(src, dst, end)
         net.occupy_link(src, end)
         if dst != src:

@@ -130,11 +130,16 @@ class Router:
 
     def __init__(self, net, plan: "RoutePlan",
                  sources: Dict[str, Dict[str, ReplicaSource]],
-                 threshold: float):
+                 threshold: float, src: Optional[str] = None):
         self.net = net
         self.plan = plan
         self.sources = sources
         self.threshold = threshold
+        # the child node reads originate from: with it known, fallback
+        # candidates are priced with the establishment the pools say a
+        # (src, candidate) route would owe — a replica this child already
+        # holds a warm connection to beats an equally-cool cold one
+        self.src = src
         self.reroutes = 0           # VMAs moved off a hot/lost owner
         # owner -> (sim_time, backlog) of the last replan that moved
         # nothing: until the clock or the owner's backlog changes, the
@@ -170,7 +175,14 @@ class Router:
             if not cands:
                 continue
             for o in cands:
-                load.setdefault(o, self.net.link_backlog(o))
+                if o not in load:
+                    load[o] = self.net.link_backlog(o)
+                    if self.src is not None:
+                        # observed pool state: a cold candidate owes its
+                        # connection setup before the first byte moves
+                        load[o] += self.net.setup_owed(
+                            route.transport or self.net.transport,
+                            self.src, o)
             best = min(cands, key=lambda o: (load[o], o))
             # a VMA the hot owner can no longer serve at all (revoked key)
             # moves to ANY usable sibling, however loaded

@@ -12,11 +12,12 @@ per-channel backlog should decide where a fork lands.
   over a stable node order; skipping a dead/excluded node never shifts the
   other nodes' turns.
 * :class:`TransportAwareScheduler` — scores each candidate against the
-  seed's route demand ((owner, transport) pairs): unconnected
-  connection-oriented fabrics charge their setup estimate (observed
-  amortized cost from the per-backend setup meters when available, the
-  backend's static ``setup_cost()`` otherwise) and busy channels charge
-  their backlog.  Ties fall back to the round-robin order, so with no
+  seed's route demand ((owner, transport) pairs) from OBSERVED pool
+  state: ``Network.setup_owed`` prices exactly the establishment the
+  next op would pay (0 for a warm slot — even a shared DCT context
+  another sibling brought up — the backend's setup cost for a cold or
+  LRU-evicted pair), and busy channels/links/control planes charge
+  their backlogs.  Ties fall back to the round-robin order, so with no
   demand context it degrades to exactly the deterministic rotation.
 """
 from __future__ import annotations
@@ -80,46 +81,32 @@ class TransportAwareScheduler(RoundRobinScheduler):
         super().__init__()
         self.net = network
 
-    def _setup_estimate(self, transport: Optional[str]) -> float:
-        """Seconds a NEW connection over ``transport`` is expected to cost:
-        the observed amortized setup from the per-backend meters when the
-        fabric has connected before, its static ``setup_cost()`` otherwise
-        (0 for connectionless fabrics)."""
-        name = transport or self.net.transport
-        t = self.net.transport_obj(name)
-        if not t.connection_oriented:
-            return 0.0
-        # read the two meter keys directly: per_backend() materializes a
-        # dict for EVERY registered backend, and this estimate runs once
-        # per candidate node per pick — at replay scale (thousands of
-        # nodes x 1e5 invocations) that dict build dominated scheduling
-        setups = self.net.meter.get(f"{name}.setups", 0)
-        if setups:
-            return self.net.meter.get(f"{name}.setup_s", 0.0) / setups
-        return t.setup_cost()
-
     def score(self, node_id: str, demand: Sequence[tuple]) -> float:
         """Cost of placing a child on ``node_id`` for the given
-        (owner, transport) route demand: unpaid connection setups, the
-        current backlog of each (child, owner) channel, and the link
-        backlog of the candidate's own NIC.  (The OWNERS' link backlogs
-        are deliberately not charged: every candidate queues on them
-        equally, so they cannot discriminate a placement.)
+        (owner, transport) route demand: the establishment the pools say
+        each route would actually owe (``Network.setup_owed`` — observed
+        state, NOT a backend-constant estimate, so a candidate holding a
+        warm shared DCT context beats a cold RC peer and an LRU-evicted
+        pair is correctly priced as cold again), the current backlog of
+        each (child, owner) channel, the link backlog of the candidate's
+        own NIC, and its control-plane backlog (in-flight handshakes).
+        (The OWNERS' link backlogs are deliberately not charged: every
+        candidate queues on them equally, so they cannot discriminate a
+        placement.)
 
-        Connection setup is paid once per (src, dst, transport) — repeated
-        demand entries for the same pair (a many-VMA plan routed to one
-        owner, or ``None`` next to the spelled-out default backend) are
-        deduped, and each (child, owner) channel is charged once, not once
-        per transport riding it."""
-        cost = self.net.link_backlog(node_id)
+        Connection setup is priced once per (src, dst, transport) —
+        repeated demand entries for the same pair (a many-VMA plan routed
+        to one owner, or ``None`` next to the spelled-out default
+        backend) are deduped, and each (child, owner) channel is charged
+        once, not once per transport riding it."""
+        cost = self.net.link_backlog(node_id) + self.net.conn_backlog(node_id)
         seen_pairs = set()
         seen_owners = set()
         for owner, transport in demand:
             name = transport or self.net.transport
             if (owner, name) not in seen_pairs:
                 seen_pairs.add((owner, name))
-                if not self.net.has_connection(name, node_id, owner):
-                    cost += self._setup_estimate(name)
+                cost += self.net.setup_owed(name, node_id, owner)
             if owner not in seen_owners:
                 seen_owners.add(owner)
                 cost += self.net.channel_backlog(node_id, owner)

@@ -207,7 +207,8 @@ class ShardedSeed:
             # divert hop-1 reads off a hot (or lost) parent link
             inst.router = Router(child_node.network, plan,
                                  self._route_sources(pairs),
-                                 threshold=policy.reroute_backlog)
+                                 threshold=policy.reroute_backlog,
+                                 src=child_node.node_id)
         return inst
 
     @staticmethod

@@ -118,6 +118,7 @@ class ReplayResult:
     backlog: Timeline
     telemetry: TelemetryStream
     meter: Dict[str, float]
+    conn: Dict[str, Dict[str, float]]        # per-backend pool counters
     lease: Dict[str, Dict[str, int]]
     payload_pages: Dict[str, int]            # rdma/rpc/cached page counts
     end_time: float
@@ -149,6 +150,11 @@ class ReplayResult:
             "lease": {f: dict(sorted(c.items()))
                       for f, c in sorted(self.lease.items())},
             "payload_pages": dict(sorted(self.payload_pages.items())),
+            # connection control plane: per-backend pool state at replay
+            # end (live slots) + churn counters — backends that never
+            # connected are omitted so connectionless replays stay stable
+            "conn": {name: dict(sorted(c.items()))
+                     for name, c in sorted(self.conn.items())},
             "end_time_s": round(self.end_time, 9),
             "events": self.events_run,
             "event_log_digest": self.event_log_digest,
@@ -305,13 +311,21 @@ class ReplayEngine:
         startup = rollup(self.startups)
         meter = {k: (round(v, 9) if isinstance(v, float) else v)
                  for k, v in sorted(self.net.meter.items())}
+        conn = {}
+        for name, pb in self.net.per_backend().items():
+            if pb["setups"] or pb["conn_live"] or pb["conn_evicted"]:
+                conn[name] = {"live": pb["conn_live"],
+                              "setups": pb["setups"],
+                              "setup_s": round(pb["setup_s"], 9),
+                              "evicted": pb["conn_evicted"],
+                              "reestablished": pb["conn_reestablished"]}
         return ReplayResult(
             policy=self.policy.describe(), trace=self.trace.name,
             seed=self.seed, nodes=len(self.nodes),
             invocations=len(arrivals), decisions=dict(self.decisions),
             latency=latency, startup=startup,
             memory=self.memory, backlog=self.backlog,
-            telemetry=self.telemetry, meter=meter,
+            telemetry=self.telemetry, meter=meter, conn=conn,
             lease={f: dict(c) for f, c in self.coord.lease_telemetry.items()},
             payload_pages=dict(self.payload_pages),
             end_time=self.end_time, events_run=self.loop.events_run,

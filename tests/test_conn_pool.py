@@ -1,0 +1,307 @@
+"""The connection control plane (repro.net.conn): bounded per-node QP/DC
+pools, LRU eviction + re-establishment churn, sibling sharing via
+instance refcounts, the RC-vs-DCT slot-footprint difference, rpc routed
+through the pool, setup-aware placement from OBSERVED pool state, and
+the replay engine's per-backend conn telemetry.
+
+The load-bearing invariant (also a hypothesis property below): the pool
+cap changes WHEN pairs pay establishment, never WHAT moves — total bytes
+and ops are invariant under ``NetModel.conn_cap``; only setups and sim
+time grow as the cap shrinks.
+"""
+import pytest
+
+from repro.core.instance import ModelInstance
+from repro.fork import ForkPolicy
+from repro.net import NetModel, Network
+from repro.placement import TransportAwareScheduler
+from repro.platform.node import NodeRuntime
+from repro.sim import (ForkOnDemand, ReplayEngine, SimFunction,
+                       build_cluster, spike_660323)
+
+
+def _net(cap=0, transport="rc"):
+    net = Network(model=NetModel(conn_cap=cap), transport=transport)
+    owner = NodeRuntime("owner", net, page_elems=64)
+    key = net.create_dc_target("owner")
+    return net, owner, key
+
+
+def _read(net, owner, key, src, transport="rc", user=None, **kw):
+    frames = owner.pool.alloc("float32", 4)
+    net.read_pages(src, "owner", "float32", frames, key,
+                   transport=transport, user=user, **kw)
+
+
+# -- bounded pools: LRU eviction and re-establishment -------------------------
+
+
+def test_rc_cap_bounds_pool_and_evicts_lru():
+    net, owner, key = _net(cap=2)
+    for c in ("c0", "c1", "c2"):
+        _read(net, owner, key, c)
+    # the owner's table holds 2 slots; c0 was least recently used
+    assert not net.has_connection("rc", "c0", "owner")
+    assert net.has_connection("rc", "c1", "owner")
+    assert net.has_connection("rc", "c2", "owner")
+    assert len(net.conns.pool("owner")) == 2
+    assert net.meter["rc.conn_evicted"] == 1
+    assert net.conns.live("rc") == 2
+
+
+def test_reestablishment_pays_setup_again_and_meters_churn():
+    net, owner, key = _net(cap=1)
+    _read(net, owner, key, "c0")
+    t0 = net.sim_time
+    _read(net, owner, key, "c0")                # warm slot: no setup
+    warm_cost = net.sim_time - t0
+    _read(net, owner, key, "c1")                # evicts (c0, owner)
+    t1 = net.sim_time
+    _read(net, owner, key, "c0")                # cold again: full QP connect
+    cold_cost = net.sim_time - t1
+    assert cold_cost - warm_cost == pytest.approx(net.model.rc_setup)
+    assert net.meter["rc.conn_reestablished"] == 1
+    assert net.meter["rc.conn_evicted"] == 2
+    assert net.meter["rc.setups"] == 3
+
+
+def test_unbounded_cap_never_evicts():
+    net, owner, key = _net(cap=0)
+    for i in range(32):
+        _read(net, owner, key, f"c{i}")
+    assert net.meter["rc.conn_evicted"] == 0
+    assert net.conns.live("rc") == 32
+    assert len(net.conns.pool("owner")) == 32
+
+
+def test_meter_reset_keeps_pools_warm():
+    net, owner, key = _net()
+    _read(net, owner, key, "c0")
+    net.reset_meter()
+    assert net.has_connection("rc", "c0", "owner")
+    _read(net, owner, key, "c0")
+    assert net.meter["rc.setups"] == 0          # still warm after reset
+
+
+# -- sibling sharing (instance-scoped refcounts) ------------------------------
+
+
+def test_unreferenced_connections_evicted_before_live_users():
+    net, owner, key = _net(cap=2)
+    _read(net, owner, key, "c1", user="c1/i0")  # referenced, becomes LRU
+    _read(net, owner, key, "c0")                # unreferenced, MRU
+    conn = net.conns.conns[("rc", "peer", "c1", "owner")]
+    _read(net, owner, key, "c1", user="c1/i1")  # sibling shares the slot
+    assert conn.users == {"c1/i0", "c1/i1"}
+    assert net.meter["rc.setups"] == 2          # sharing: no third setup
+    _read(net, owner, key, "c2")                # overflow at the owner
+    # c1's QP is older but referenced: the unreferenced c0 slot goes first
+    assert net.has_connection("rc", "c1", "owner")
+    assert not net.has_connection("rc", "c0", "owner")
+    # releasing both refs keeps the slot warm but first in line
+    net.conn_release_user("c1/i0")
+    net.conn_release_user("c1/i1")
+    assert conn.users == set()
+    assert net.has_connection("rc", "c1", "owner")
+    _read(net, owner, key, "c3")
+    assert not net.has_connection("rc", "c1", "owner")
+
+
+def test_forced_eviction_when_every_slot_is_referenced():
+    # the QP table is a hard hardware bound: under full referenced
+    # pressure the LRU slot is torn out from under its user anyway
+    net, owner, key = _net(cap=1)
+    _read(net, owner, key, "c0", user="u0")
+    _read(net, owner, key, "c1", user="u1")
+    assert not net.has_connection("rc", "c0", "owner")
+    assert net.has_connection("rc", "c1", "owner")
+    assert net.meter["rc.conn_evicted"] == 1
+
+
+def test_fork_children_share_and_release_connection_refs(
+        cluster, hello_cfg, hello_params):
+    net, nodes = cluster
+    parent = ModelInstance.create(nodes[0], hello_cfg.name, hello_params)
+    handle = nodes[0].prepare_fork(parent)
+    pol = ForkPolicy(lazy=True, page_fetch="rc", descriptor_fetch="rc")
+    c1 = handle.resume_on(nodes[1], pol)
+    c2 = handle.resume_on(nodes[1], pol)
+    c1.touch_pages(c1.leaf_names[0], [0])
+    c2.touch_pages(c2.leaf_names[0], [0])
+    conn = net.conns.conns[("rc", "peer", "node1", "node0")]
+    assert {c1._conn_user, c2._conn_user} <= conn.users
+    c1.free()
+    assert c1._conn_user not in conn.users
+    assert c2._conn_user in conn.users
+    assert net.has_connection("rc", "node1", "node0")
+
+
+# -- RC vs DCT, structurally --------------------------------------------------
+
+
+def test_dct_slot_footprint_beats_rc_under_cap():
+    """Fanning one source out to 3 owners twice: per-peer RC churns a
+    2-slot table (3 QPs cannot fit), while DCT holds ONE initiator slot
+    at the source regardless of fan-out degree — no churn, and each pair
+    pays only its piggybacked handshake once."""
+    for tname in ("rc", "dct"):
+        net = Network(model=NetModel(conn_cap=2), transport=tname)
+        owners = [NodeRuntime(f"o{i}", net, page_elems=64) for i in range(3)]
+        keys = [net.create_dc_target(o.node_id) for o in owners]
+        for _ in range(2):
+            for o, k in zip(owners, keys):
+                frames = o.pool.alloc("float32", 4)
+                net.read_pages("src", o.node_id, "float32", frames, k,
+                               transport=tname)
+        if tname == "rc":
+            assert net.meter["rc.conn_evicted"] > 0
+            assert net.meter["rc.conn_reestablished"] > 0
+        else:
+            assert net.meter["dct.conn_evicted"] == 0
+            assert net.meter["dct.conn_reestablished"] == 0
+            assert net.meter["dct.setups"] == 3     # one piggyback per pair
+            assert len(net.conns.pool("src")) == 1  # one DC initiator slot
+
+
+def test_dct_target_eviction_invalidates_initiator_handshakes():
+    net, owner, key = _net(transport="dct")
+    _read(net, owner, key, "c0", transport="dct")
+    assert net.has_connection("dct", "c0", "owner")
+    tgt = net.conns.conns[("dct", "tgt", "owner")]
+    net.conns.evict(tgt)
+    # the initiator context survives but its handshake to the owner died
+    assert ("dct", "dci", "c0") in net.conns.conns
+    assert not net.has_connection("dct", "c0", "owner")
+    _read(net, owner, key, "c0", transport="dct")
+    assert net.meter["dct.conn_reestablished"] == 1
+
+
+# -- every data-plane verb rides the pool -------------------------------------
+
+
+def test_rpc_pays_and_reuses_connection_setup():
+    """``Transport.rpc`` used to skip ``_setup`` entirely — an RPC-only
+    workload never paid (or recorded) connection establishment."""
+    net, owner, key = _net()
+    t0 = net.sim_time
+    net.rpc("c0", "owner", 256, lambda: None, transport="rc")
+    first = net.sim_time - t0
+    t1 = net.sim_time
+    net.rpc("c0", "owner", 256, lambda: None, transport="rc")
+    second = net.sim_time - t1
+    assert first - second == pytest.approx(net.model.rc_setup)
+    assert net.has_connection("rc", "c0", "owner")
+    assert net.meter["rc.setups"] == 1
+    # and the QP is shared with the one-sided verbs: reads are warm too
+    _read(net, owner, key, "c0")
+    assert net.meter["rc.setups"] == 1
+
+
+# -- observed state feeds placement -------------------------------------------
+
+
+def test_scheduler_prefers_observed_warm_path():
+    net = Network(transport="rc")
+    owner = NodeRuntime("owner", net, page_elems=64)
+    workers = {f"w{i}": NodeRuntime(f"w{i}", net, page_elems=64)
+               for i in range(4)}
+    key = net.create_dc_target("owner")
+    frames = owner.pool.alloc("float32", 4)
+    net.read_pages("w2", "owner", "float32", frames, key, transport="rc")
+    # round-robin fallback would say w0; the warm QP at w2 must win
+    sched = TransportAwareScheduler(net)
+    pick = sched.pick(workers, demand=[("owner", "rc")])
+    assert pick.node_id == "w2"
+    assert net.setup_owed("rc", "w2", "owner") == 0.0
+    assert net.setup_owed("rc", "w0", "owner") == net.model.rc_setup
+
+
+def test_async_cold_setup_shows_as_conn_backlog():
+    net, owner, key = _net()
+    frames = owner.pool.alloc("float32", 4)
+    net.read_pages("c0", "owner", "float32", frames, key, transport="rc",
+                   async_read=True)
+    # async issue leaves the clock untouched; the handshake-in-flight is
+    # visible as control-plane backlog at both endpoints instead
+    assert net.sim_time == 0.0
+    assert net.conn_backlog("c0") >= net.model.rc_setup - 1e-12
+    assert net.conn_backlog("owner") >= net.model.rc_setup - 1e-12
+    sched = TransportAwareScheduler(net)
+    assert sched.score("c0", []) >= net.model.rc_setup
+
+
+# -- telemetry ----------------------------------------------------------------
+
+
+def test_per_backend_exports_conn_counters():
+    net, owner, key = _net(cap=1)
+    for c in ("c0", "c1", "c0"):
+        _read(net, owner, key, c)
+    pb = net.per_backend()["rc"]
+    assert pb["setups"] == 3
+    assert pb["conn_evicted"] == 2
+    assert pb["conn_reestablished"] == 1
+    assert pb["conn_live"] == net.conns.live("rc") == 1
+
+
+def test_unregister_tears_down_node_connections():
+    net, owner, key = _net()
+    _read(net, owner, key, "c0")
+    assert net.has_connection("rc", "c0", "owner")
+    net.unregister("owner")
+    assert not net.has_connection("rc", "c0", "owner")
+    assert net.conns.live("rc") == 0
+
+
+def test_replay_surfaces_conn_counters_and_stays_deterministic():
+    def run_once():
+        net, nodes = build_cluster(8, transport="rc", page_elems=1024,
+                                   model=NetModel(conn_cap=2))
+        eng = ReplayEngine(
+            spike_660323(func="f"), ForkOnDemand(prefetch=0),
+            [SimFunction("f", state_bytes=16 * 1024, touch_frac=0.25,
+                         hold_s=60.0)],
+            seed=7, network=net, nodes=nodes)
+        return eng.run()
+
+    r1, r2 = run_once(), run_once()
+    conn = r1.summary()["conn"]
+    assert "rc" in conn
+    assert conn["rc"]["setups"] > 0
+    assert conn["rc"]["live"] >= 1
+    # 201 invocations over 8 nodes with 2 slots per table must churn
+    assert conn["rc"]["evicted"] > 0
+    assert conn["rc"]["reestablished"] > 0
+    assert r1.digest() == r2.digest()
+
+
+# -- the invariant: the cap moves time, never bytes ---------------------------
+
+
+def test_bytes_invariant_under_conn_cap_property():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(caps=st.lists(st.integers(min_value=1, max_value=6),
+                         min_size=2, max_size=3, unique=True),
+           seq=st.lists(st.integers(min_value=0, max_value=5),
+                        min_size=1, max_size=24))
+    def prop(caps, seq):
+        stats = []
+        for cap in [0] + caps:
+            net, owner, key = _net(cap=cap)
+            frames = owner.pool.alloc("float32", 4)
+            for c in seq:
+                net.read_pages(f"c{c}", "owner", "float32", frames, key,
+                               transport="rc")
+            stats.append((net.meter["rc.bytes"], net.meter["rc.ops"],
+                          net.meter["rc.setups"], net.sim_time))
+        assert len({s[0] for s in stats}) == 1   # bytes invariant
+        assert len({s[1] for s in stats}) == 1   # ops invariant
+        # the unbounded pool pays the fewest setups and finishes first
+        assert all(s[2] >= stats[0][2] for s in stats[1:])
+        assert all(s[3] >= stats[0][3] - 1e-12 for s in stats[1:])
+
+    prop()

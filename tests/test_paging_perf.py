@@ -192,7 +192,7 @@ def test_scattered_read_pays_per_run_and_caps_at_max_sge():
     contiguous = {"ops": net.meter["dct.ops"], "t": net.sim_time}
     assert contiguous["ops"] == 1 and net.meter["dct.sges"] == 1
     net.reset_meter()
-    net._connections.clear()
+    net.reset_connections()
     scattered = frames[::2]                                      # 64 runs
     net.read_pages("n1", "n0", "float32", scattered, key)
     assert net.meter["dct.sges"] == 64
