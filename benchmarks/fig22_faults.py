@@ -1,0 +1,233 @@
+"""Figure 22: fault-plane replay — the spike trace under injected crashes,
+NIC flaps and per-op timeouts, through the full recovery chain.
+
+MITOSIS §6.2's deployability claim is that remote fork *survives* failure:
+leases bound orphaned children and a child whose parent dies falls back
+instead of hanging on a dead RDMA peer.  This benchmark makes that claim a
+pinned number.  Every row replays the fig20 spike trace (smaller scale)
+under ``ForkOnDemand(replicas=2)`` with a :class:`~repro.sim.FaultPlan`:
+
+* ``baseline``  — no fault plane at all;
+* ``zero``      — a LIVE injector with an all-zero plan: its full summary
+  digest must be bit-identical to ``baseline`` (the fault plane is free
+  when nothing is planned);
+* ``crash`` / ``flap`` — a targeted fault on a seed parent inside the
+  burst minute, guaranteeing mid-execution failures so the recovery chain
+  (sibling re-route -> coordinator re-seed -> graceful coldstart) runs and
+  moves bytes;
+* ``crash_sweep`` / ``storm`` — seeded random plans (crash-rate and
+  flap-rate sweeps, plus op timeouts) over the whole cluster.
+
+The replayed function is *phased*: its handler touches half its working
+set at start and the rest mid-execution (``exec_s`` later), the demand-
+paging-over-execution pattern that makes a parent loss observable at all —
+a handler that pages everything at t0 can never be caught mid-read.
+
+Gates (``--smoke``): the zero row is digest-identical to baseline; every
+faulted row completes >= 99% of invocations; the targeted rows move
+recovery bytes; a repeated storm replay is byte-identical; and no row
+exceeds the wall budget.  ``run(write_json=...)`` pins the summary into
+``BENCH_faults.json`` (merge-written, see benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import gc
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import merge_bench_json
+from repro.net.model import NetModel
+from repro.sim import (Crash, FaultPlan, Flap, ForkOnDemand, ReplayEngine,
+                       SimFunction, build_cluster, spike_660323)
+
+FN = "spike"
+SEED = 20260809
+SCALE = 8                 # 201 x 8 = 1608 invocations
+N_NODES = 32
+PAGE_ELEMS = 1024         # 4 KiB sim pages
+STATE_BYTES = 64 * PAGE_ELEMS * 4   # 64 pages / container across 2 VMAs
+TOUCH = 0.5
+EXEC_S = 0.5              # long enough that faults land mid-execution
+HOLD_S = 60.0
+REPLICAS = 2
+N_LINKS = 8               # concurrent wire transfers per NIC: the phased
+#                           handlers' mid-execution reads reserve lane time
+#                           in the future, and a single-lane NIC cannot
+#                           backfill the idle gap they leave behind — at the
+#                           burst's arrival rate that compounds into hundreds
+#                           of seconds of spurious backlog
+ROW_WALL_BUDGET_S = 120.0  # per-row wall ceiling enforced by --smoke
+# the burst minute of SPIKE_660323 (index 5): targeted faults land here,
+# and the deterministic round-robin deploy places seed replicas on n0/n1
+BURST_T = 300.0
+SEED_NODE = "n0"
+
+
+@dataclasses.dataclass(frozen=True)
+class PhasedFunction(SimFunction):
+    """A SimFunction whose handler pages in across its execution: half the
+    working set at start, the rest ``exec_s`` later — so a parent lost
+    mid-run leaves the child with unread remote pages to recover."""
+
+    def behavior(self, inst, inputs):
+        for name, vma in inst.aspace.items():
+            n = max(1, int(round(vma.npages * self.touch_frac)))
+            inst.fetch_pages(name, np.arange(n // 2))
+            inst.node.network.advance(self.exec_s / 2)
+            inst.fetch_pages(name, np.arange(n // 2, n))
+        return {}
+
+
+def _function() -> PhasedFunction:
+    return PhasedFunction(FN, state_bytes=STATE_BYTES, vmas=2,
+                          touch_frac=TOUCH, exec_s=EXEC_S, hold_s=HOLD_S)
+
+
+def _node_ids(n: int = N_NODES):
+    return [f"n{i}" for i in range(n)]
+
+
+def _plans(duration_s: float):
+    """label -> FaultPlan (None = no fault plane installed at all)."""
+    ids = _node_ids()
+    return {
+        "baseline": None,
+        # live injector, nothing planned: must not perturb one bit
+        "zero": FaultPlan.random(SEED, ids, duration_s, crash_rate=0.0),
+        # targeted: a seed parent dies / flaps inside the burst, while
+        # children forked from it are mid-execution
+        "crash": FaultPlan(seed=1, crashes=(Crash(BURST_T + 25.0, SEED_NODE),),
+                           op_fail_rate=0.02),
+        "flap": FaultPlan(seed=2, flaps=(Flap(BURST_T + 20.0, BURST_T + 25.0,
+                                              SEED_NODE),),
+                          op_fail_rate=0.02),
+        # seeded random sweeps over the whole cluster
+        "crash_sweep": FaultPlan.random(SEED + 1, ids, duration_s,
+                                        crash_rate=0.15, op_fail_rate=0.05),
+        "storm": FaultPlan.random(SEED + 2, ids, duration_s, crash_rate=0.1,
+                                  flap_rate=0.2, degrade_rate=0.1,
+                                  op_fail_rate=0.05),
+    }
+
+
+def replay_once(plan, scale: int = SCALE, n_nodes: int = N_NODES,
+                seed: int = SEED):
+    """One fault-plane replay -> (deterministic summary, wall seconds)."""
+    trace = spike_660323(scale=scale)
+    net, nodes = build_cluster(n_nodes, model=NetModel(node_links=N_LINKS),
+                               page_elems=PAGE_ELEMS)
+    eng = ReplayEngine(trace, ForkOnDemand(replicas=REPLICAS, prefetch=0),
+                       [_function()], network=net, nodes=nodes, seed=seed,
+                       reroute_backlog=0.05, faults=plan)
+    t0 = time.perf_counter()
+    res = eng.run()
+    wall = time.perf_counter() - t0
+    summary = res.summary()
+    del eng, res, trace
+    gc.collect()
+    return summary, wall
+
+
+def run_sweeps(write_json=None, scale: int = SCALE, n_nodes: int = N_NODES,
+               seed: int = SEED):
+    duration = spike_660323(scale=scale).duration_s
+    plans = _plans(duration)
+    rows, reps, walls = [], {}, {}
+    for label, plan in plans.items():
+        s, wall = replay_once(plan, scale=scale, n_nodes=n_nodes, seed=seed)
+        reps[label], walls[label] = s, wall
+        f = s.get("faults") or {}
+        rec = f.get("recovery") or {}
+        rows.append(dict(
+            name=f"fig22.{label}",
+            wall_s=round(wall, 3),
+            invocations=s["invocations"],
+            forks=s["decisions"].get("fork", 0),
+            colds=s["decisions"].get("cold", 0),
+            degraded=s["decisions"].get("degraded", 0),
+            failed=s["decisions"].get("failed", 0),
+            completion_rate=f.get("completion_rate", 1.0),
+            p99_us=s["latency"]["all"]["p99_us"],
+            crashes=f.get("crashes_fired", 0),
+            timeouts=f.get("timeouts", 0),
+            retries=f.get("retries", 0),
+            recovery_pages=rec.get("pages", 0),
+            recovery_bytes=rec.get("bytes", 0),
+            reseeds=rec.get("reseed", 0),
+            digest=s["event_log_digest"][:12]))
+    # determinism witness: the storm plan replayed twice must match exactly
+    d2, _ = replay_once(plans["storm"], scale=scale, n_nodes=n_nodes,
+                        seed=seed)
+    faulted = [l for l in plans if plans[l] is not None
+               and not plans[l].empty()]
+    targeted_bytes = sum(
+        (reps[l]["faults"]["recovery"]["bytes"]) for l in ("crash", "flap"))
+    summary = {
+        "schema": "faults-bench/v1",
+        "rows": rows,
+        "seed": seed,
+        "nodes": n_nodes,
+        "invocations": reps["baseline"]["invocations"],
+        "replicas": REPLICAS,
+        # the three smoke gates
+        "zero_plan_identical": reps["zero"] == reps["baseline"],
+        "completion": {l: reps[l]["faults"]["completion_rate"]
+                       for l in faulted},
+        "completion_gate": all(reps[l]["faults"]["completion_rate"] >= 0.99
+                               for l in faulted),
+        "recovery_bytes_targeted": targeted_bytes,
+        "recovery_gate": targeted_bytes > 0,
+        "deterministic": d2 == reps["storm"],
+        "event_log_digest": {l: reps[l]["event_log_digest"] for l in plans},
+        "lease": {l: reps[l]["lease"] for l in ("crash", "crash_sweep")},
+    }
+    if write_json:
+        tracked = dict(summary)
+        tracked["rows"] = [{k: v for k, v in r.items() if k != "wall_s"}
+                           for r in rows]
+        merge_bench_json(write_json, {"fig22": tracked})
+    return rows, summary, walls
+
+
+def run(write_json=None):
+    """Harness entry point (benchmarks/run.py)."""
+    return run_sweeps(write_json=write_json)[0]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="write BENCH_faults.json and fail unless the "
+                         "zero-plan/completion/recovery/determinism gates "
+                         "hold inside the wall budget")
+    ap.add_argument("--json", default="BENCH_faults.json")
+    ap.add_argument("--scale", type=int, default=SCALE)
+    ap.add_argument("--nodes", type=int, default=N_NODES)
+    ap.add_argument("--seed", type=int, default=SEED)
+    args = ap.parse_args()
+    rows, s, walls = run_sweeps(write_json=args.json, scale=args.scale,
+                                n_nodes=args.nodes, seed=args.seed)
+    for r in rows:
+        print(",".join(f"{k}={v}" for k, v in r.items()))
+    print(f"wrote {args.json}")
+    if args.smoke:
+        slow = {l: round(w, 1) for l, w in walls.items()
+                if w > ROW_WALL_BUDGET_S}
+        ok = (s["zero_plan_identical"] and s["completion_gate"]
+              and s["recovery_gate"] and s["deterministic"] and not slow)
+        print(f"smoke: zero_plan_identical={s['zero_plan_identical']} "
+              f"completion={s['completion']} (gate>=99%) "
+              f"recovery_bytes={s['recovery_bytes_targeted']} (gate>0) "
+              f"deterministic={s['deterministic']} "
+              f"over_budget={slow or None} "
+              f"-> {'OK' if ok else 'FAIL'}")
+        return 0 if ok else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -19,7 +19,7 @@ from repro.core import descriptor as desc_mod
 from repro.core.pagetable import F_DIRTY, F_PRESENT, VMA, AddressSpace
 from repro.core.prefetch import PrefetchEngine
 from repro.memory import paging
-from repro.net import AccessRevoked
+from repro.net import AccessRevoked, RecoveryFailed, TransportError
 
 
 class ModelInstance:
@@ -58,6 +58,12 @@ class ModelInstance:
         # the sharded resume when ForkPolicy.reroute_backlog is set (None =
         # static routes).  Consulted by _hop_groups before hop-1 reads.
         self.router = None
+        # coordinator recovery hook: called as hook(inst, vma, lost_owner)
+        # when a remote read fails past transport retries AND the Router
+        # (if any) could not move the plan to a live sibling.  Returns
+        # True after re-stamping the VMA's missing pages from a fresh
+        # (possibly re-replicated) seed so the fetch can be retried.
+        self.recover_owner = None
         # True once this instance's frame table traveled in a descriptor
         # (prepare_fork): only then can other nodes hold cache entries
         # keyed on our frames, so only then must free() broadcast
@@ -178,29 +184,101 @@ class ModelInstance:
         """Synchronously materialize ``want`` (missing) pages, grouped by
         owner hop, with batched cache probes and run-coalesced reads."""
         for owner, key, plist, remote_frames in self._hop_groups(vma, want):
+            self._read_group(vma, owner, key, plist, remote_frames)
+
+    def _read_group(self, vma: VMA, owner: str, key: int, plist,
+                    remote_frames, depth: int = 0) -> None:
+        """One grouped remote read, with the §6.2-style failure ladder:
+        revoked access degrades to the owner's RPC daemon; a transport
+        failure (owner crashed, NIC flapped, retries exhausted) enters the
+        recovery chain (sibling replica -> coordinator re-seed -> typed
+        :class:`RecoveryFailed` that callers degrade to a coldstart)."""
+        net = self.node.network
+        try:
+            data = net.read_pages(
+                self.node.node_id, owner, vma.dtype, remote_frames, key,
+                transport=vma.transport or self.page_transport,
+                user=self._conn_user)
+            self.stats["pages_rdma"] += int(plist.size)
+        except AccessRevoked:
+            # VA->PA changed at the owner (swap, reclaim): RPC fallback —
+            # which itself rides the fabric, so its failure recovers too
             try:
-                data = self.node.network.read_pages(
-                    self.node.node_id, owner, vma.dtype, remote_frames, key,
-                    transport=vma.transport or self.page_transport,
-                    user=self._conn_user)
-                self.stats["pages_rdma"] += int(plist.size)
-            except AccessRevoked:
-                # VA->PA changed at the owner (swap, reclaim): RPC fallback
                 self._fallback_fetch(vma, owner, plist)
-                continue
-            local = self._adopt_pages(vma, plist, data)
-            self.node.page_cache_put_many(owner, vma.dtype, remote_frames,
-                                          local)
+            except TransportError as err:
+                self._recover_group(vma, owner, plist, err, depth)
+            return
+        except TransportError as err:
+            self._recover_group(vma, owner, plist, err, depth)
+            return
+        local = self._adopt_pages(vma, plist, data)
+        self.node.page_cache_put_many(owner, vma.dtype, remote_frames,
+                                      local)
+
+    def _recover_group(self, vma: VMA, owner: str, plist, err: Exception,
+                       depth: int) -> None:
+        """Recover ``plist`` after ``owner`` became unreachable.  Each rung
+        re-resolves owners and re-reads only the still-missing subset, so a
+        half-materialized retry adopts every page at most once (no
+        double-charged pagetable, no COW corruption — dirty pages are
+        resident and never re-stamped)."""
+        net = self.node.network
+        if depth >= 2:
+            raise RecoveryFailed(
+                f"recovery exhausted for {int(np.size(plist))} page(s) of "
+                f"{vma.name} owned by {owner}") from err
+        if owner not in net.nodes:
+            # fail-stop owner: its frame namespace is gone — local cache
+            # entries keyed on it must never serve a future probe
+            self.node.page_cache_drop_owner(owner)
+        if depth == 0 and self.router is not None:
+            before = vma.ancestry[0] if vma.ancestry else None
+            self.router.sync(vma)
+            now = vma.ancestry[0] if vma.ancestry else None
+            if now is not None and now != before and now != owner:
+                # rung 1: the Router re-stamped the plan onto a live
+                # sibling replica (lost-owner re-route from PR 5)
+                net.meter["recovery.sibling"] += 1
+                self._refetch(vma, plist, depth + 1)
+                return
+        hook = self.recover_owner
+        if hook is not None and hook(self, vma, owner):
+            # rung 2: the coordinator re-stamped us from a fresh (possibly
+            # just re-replicated) seed
+            net.meter["recovery.reseed"] += 1
+            self._refetch(vma, plist, depth + 1)
+            return
+        raise RecoveryFailed(
+            f"no recovery path for {int(np.size(plist))} page(s) of "
+            f"{vma.name} owned by {owner}") from err
+
+    def _refetch(self, vma: VMA, plist, depth: int) -> None:
+        """Re-issue the still-missing subset of a failed group through the
+        normal grouped path (owners/keys re-resolved from the re-stamped
+        page table); the recovered bytes are metered separately."""
+        plist = np.atleast_1d(np.asarray(plist))
+        still = plist[vma.missing_mask()[plist]]
+        if still.size == 0:
+            return
+        net = self.node.network
+        net.meter["recovery.pages"] += int(still.size)
+        net.meter["recovery.bytes"] += (int(still.size)
+                                        * self.node.pool.page_elems
+                                        * np.dtype(vma.dtype).itemsize)
+        for owner, key, sub, rframes in self._hop_groups(vma, still):
+            self._read_group(vma, owner, key, sub, rframes, depth)
 
     def _fallback_fetch(self, vma: VMA, owner: str, plist) -> None:
         # the fallback daemon is inherently two-sided: always the rpc backend
         net = self.node.network
+        target = net.require_node(owner)    # typed NodeDown if it crashed
         frames = vma.frames[plist]
         data = net.rpc(self.node.node_id, owner,
                        len(frames) * self.node.pool.page_elems
                        * np.dtype(vma.dtype).itemsize,
-                       net.nodes[owner].fallback_serve, vma.dtype, frames,
+                       target.fallback_serve, vma.dtype, frames,
                        transport="rpc")
+        net.meter["page_pages_moved"] += len(frames)
         self._adopt_pages(vma, plist, data)
         self.stats["pages_rpc"] += len(frames)
 

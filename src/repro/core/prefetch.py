@@ -32,7 +32,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.net import AccessRevoked
+from repro.net import AccessRevoked, TransportError
 
 
 @dataclasses.dataclass
@@ -99,6 +99,11 @@ class PrefetchEngine:
                                       user=inst._conn_user)
             except AccessRevoked:
                 continue            # sync path will take the RPC fallback
+            except TransportError:
+                # owner unreachable (crash/flap/retries exhausted): leave
+                # the pages missing — the sync fault path runs the full
+                # recovery chain when they are actually touched
+                continue
             self._pending.setdefault(name, []).append(_Pending(
                 pages=sub.astype(np.int64),
                 data=np.asarray(data),

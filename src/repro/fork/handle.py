@@ -23,6 +23,7 @@ from repro.core.descriptor import Descriptor
 from repro.core.instance import ModelInstance
 from repro.core.pagetable import VMA
 from repro.fork.policy import ForkPolicy
+from repro.net import HandleUnbound, NodeDown
 
 DEFAULT_TREE_DEGREE = 8
 
@@ -125,7 +126,7 @@ class ForkHandle:
         policy = ForkPolicy.coerce(policy)
         net = child_node.network
         if self.parent_node not in net.nodes:
-            raise ConnectionError(f"parent {self.parent_node} is down")
+            raise NodeDown(f"parent {self.parent_node} is down")
         parent = net.nodes[self.parent_node]
 
         # 1) authentication RPC (malformed ids/keys, revoked generations and
@@ -216,7 +217,7 @@ class ForkHandle:
 
     def _require_runtime(self):
         if self.runtime is None:
-            raise RuntimeError(
+            raise HandleUnbound(
                 "handle is not bound to its parent runtime; call "
                 "handle.bind(parent_node_runtime) after deserializing")
         return self.runtime

@@ -8,7 +8,11 @@ meter aggregation).  Built-in backends: ``dct``, ``rc``, ``rpc``,
 """
 from repro.net.conn import (ConnManager, ConnPool, Connection, DCTInitiator,
                             DCTTarget, RCConnection)
-from repro.net.errors import AccessRevoked, LeaseExpired
+from repro.net.errors import (AccessRevoked, AuthError, HandleUnbound,
+                              LeaseExpired, NoNodesAvailable, NodeDown,
+                              ReadTimeout, RecoveryFailed, ReproError,
+                              RetriesExhausted, SeedGone, SeedUnavailable,
+                              TransportError)
 from repro.net.model import NetModel
 from repro.net.network import Network
 from repro.net.transport import (Transport, contiguous_runs,
@@ -19,6 +23,17 @@ from repro.net.backends import (DctTransport, RcTransport, RpcTransport,
 
 __all__ = [
     "AccessRevoked",
+    "AuthError",
+    "HandleUnbound",
+    "NoNodesAvailable",
+    "NodeDown",
+    "ReadTimeout",
+    "RecoveryFailed",
+    "ReproError",
+    "RetriesExhausted",
+    "SeedGone",
+    "SeedUnavailable",
+    "TransportError",
     "ConnManager",
     "ConnPool",
     "Connection",

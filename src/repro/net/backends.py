@@ -34,6 +34,7 @@ class DctTransport(Transport):
     conn_kind = "dc"               # one initiator/target context per node
     legacy_meter = "rdma"
     max_sge = 16                   # SGEs per doorbell-batched work request
+    max_retries = 3                # DC re-posts are cheap: no QP to rebuild
 
     def setup_cost(self) -> float:
         return self.model.dct_setup
@@ -55,6 +56,8 @@ class RcTransport(Transport):
     conn_kind = "peer"             # one QP per (src, dst), slots both ends
     legacy_meter = "rdma"
     max_sge = 16
+    max_retries = 2                # each retry re-pays the 4 ms QP connect
+                                   # (timeout moves the QP to error state)
 
     def setup_cost(self) -> float:
         return self.model.rc_setup
@@ -76,6 +79,9 @@ class RpcTransport(Transport):
     one_sided = False
     legacy_meter = "rpc"
     max_sge = 8                    # the daemon batches extents per request
+    max_retries = 0                # the fallback path does not retry: a
+                                   # timed-out daemon call fails over at
+                                   # once (the caller picks another serve)
 
     def op_latency(self) -> float:
         return self.model.rpc_lat
@@ -93,6 +99,7 @@ class TpuIciTransport(Transport):
     one_sided = True
     legacy_meter = "ici"
     max_sge = 32                   # DMA descriptor ring, deep batching
+    max_retries = 2
 
     def op_latency(self) -> float:
         return self.model.ici_lat
@@ -110,6 +117,7 @@ class SharedFsTransport(Transport):
     one_sided = False
     legacy_meter = "dfs"
     max_sge = 1                    # every extent is a separate DFS request
+    max_retries = 1                # one slow re-read of the checkpoint file
 
     def op_latency(self) -> float:
         return self.model.dfs_lat

@@ -219,6 +219,17 @@ class ConnManager:
             if conn is not None:
                 conn.users.discard(user)
 
+    def fault_pair(self, name: str, src: str, dst: str) -> None:
+        """An op on the (src, dst) QP over backend ``name`` timed out: RC
+        semantics move the QP to the error state, so the connection is
+        torn down at both endpoints (``{name}.conn_faulted``) and the
+        retry re-pays establishment through ``acquire`` — metered as
+        re-establishment churn because the pair was seen before."""
+        conn = self.conns.get((name, "peer", src, dst))
+        if conn is not None:
+            self.evict(conn)
+            self.net.meter[f"{name}.conn_faulted"] += 1
+
     def drop_node(self, node_id: str) -> None:
         """A node left the network (crash/unregister): every connection
         with a slot in its pool dies — peers will re-pay setup if the

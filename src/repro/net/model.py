@@ -31,3 +31,8 @@ class NetModel:
                                     # contexts a NIC holds); overflow evicts
                                     # LRU and the pair re-pays setup on next
                                     # use (<= 0 = unbounded, legacy behavior)
+    op_timeout_s: float = 1e-3      # how long one op attempt holds its lane
+                                    # before the initiator declares it lost
+                                    # (injected fault / flapped peer NIC)
+    retry_backoff_s: float = 5e-4   # linear backoff unit between attempts:
+                                    # attempt k waits k * retry_backoff_s

@@ -21,7 +21,7 @@ from typing import Dict, Optional
 
 from repro.net import backends as _backends   # noqa: F401  (registers built-ins)
 from repro.net.conn import ConnManager
-from repro.net.errors import AccessRevoked
+from repro.net.errors import AccessRevoked, NodeDown
 from repro.net.model import NetModel
 from repro.net.transport import Transport, resolve_transport, transport_names
 
@@ -59,6 +59,11 @@ class Network:
         # DC targets: (node_id, dc_key) -> True while valid
         self._dc_targets: Dict[tuple, bool] = {}
         self._next_key = 1
+        # fault plane: a repro.sim.faults.FaultInjector when a replay (or
+        # test) installs one; None on the fault-free path, in which case
+        # transports skip every fault check and charge identically to a
+        # pre-fault-plane build (digest-stable by construction)
+        self.faults = None
 
     # -- transport registry ----------------------------------------------------
 
@@ -87,7 +92,7 @@ class Network:
     def require_node(self, node_id: str):
         node = self.nodes.get(node_id)
         if node is None:
-            raise ConnectionError(f"node {node_id} is down")
+            raise NodeDown(f"node {node_id} is down")
         return node
 
     def drop_cached_frames(self, owner: str, dtype: str, frames) -> None:

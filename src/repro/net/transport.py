@@ -55,6 +55,8 @@ from typing import ClassVar, Dict, List, Optional, Type
 
 import numpy as np
 
+from repro.net.errors import RetriesExhausted
+
 
 _REGISTRY: Dict[str, Type["Transport"]] = {}
 
@@ -136,6 +138,11 @@ class Transport(abc.ABC):
     conn_kind: ClassVar[Optional[str]] = None
     legacy_meter: ClassVar[str]                # aggregate category: rdma|rpc|ici|dfs
     max_sge: ClassVar[int] = 16                # SGEs per doorbell-batched op
+    # how many times one op is re-posted after a timeout before the backend
+    # surfaces RetriesExhausted; 0 = fail over immediately (the rpc path's
+    # "fall back" semantics).  Only consulted when a FaultInjector is
+    # installed on the network — the fault-free path never checks.
+    max_retries: ClassVar[int] = 2
 
     def __init__(self, net):
         self.net = net
@@ -159,6 +166,68 @@ class Transport(abc.ABC):
         """Seconds of fixed latency per two-sided round trip."""
         return self.model.rpc_lat
 
+    # -- fault plane --------------------------------------------------------
+
+    def op_timeout(self) -> float:
+        """Seconds one attempt holds its lane before it is declared lost."""
+        return self.model.op_timeout_s
+
+    def _penalty(self, src: str, dst: str) -> float:
+        """Degradation multiplier (>= 1.0) on this transfer's wire time —
+        1.0 exactly when no fault injector is installed or neither endpoint
+        NIC is degraded, so the fault-free cost model is bit-identical."""
+        inj = self.net.faults
+        if inj is None:
+            return 1.0
+        return inj.penalty(src, dst)
+
+    def _admit(self, op: str, src: str, dst: str, sync: bool = True) -> None:
+        """Fault-injection gate ahead of every data-plane op.
+
+        No-op without an installed injector.  A faulted attempt models an
+        initiator-side completion timeout: the op held a lane at both
+        endpoints for ``NetModel.op_timeout_s`` moving ZERO payload bytes
+        (metered ``{name}.timeouts``), then — for per-pair fabrics (RC) —
+        the QP transitioned to the error state, so the connection is torn
+        down and the retry re-pays establishment through the pool, charged
+        on the link clock by ``_setup`` like any cold pair.  Between
+        attempts the initiator backs off linearly
+        (``attempt * retry_backoff_s``, metered ``backoff_wait_s``); after
+        ``max_retries`` re-posts the backend gives up with a typed
+        :class:`RetriesExhausted`.  Async callers meter identically but
+        never block the sim clock (their issue loop absorbs the failure)."""
+        inj = self.net.faults
+        if inj is None:
+            return
+        net = self.net
+        meter = net.meter
+        attempt = 0
+        while inj.op_fault(self.name, op, src, dst):
+            attempt += 1
+            meter["timeouts"] += 1
+            meter[f"{self.name}.timeouts"] += 1
+            if sync:
+                timeout = self.op_timeout()
+                start = max(net.sim_time, net.link_free(src),
+                            net.link_free(dst))
+                end = start + timeout
+                net.occupy_link(src, end)
+                if dst != src:
+                    net.occupy_link(dst, end)
+                net.sim_time = end
+            if self.conn_kind == "peer":
+                net.conns.fault_pair(self.name, src, dst)
+            if attempt > self.max_retries:
+                raise RetriesExhausted(
+                    f"{self.name} {op} {src}->{dst}: "
+                    f"{attempt} attempt(s) timed out")
+            meter["retries"] += 1
+            meter[f"{self.name}.retries"] += 1
+            backoff = self.model.retry_backoff_s * attempt
+            if sync and backoff > 0:
+                meter["backoff_wait_s"] += backoff
+                net.sim_time += backoff
+
     # -- data plane ---------------------------------------------------------
 
     def read_pages(self, src: str, dst: str, dtype, frames, dc_key: int,
@@ -176,6 +245,10 @@ class Transport(abc.ABC):
         """
         node = self.net.require_node(dst)
         self.net.check_target(dst, dc_key)
+        # the fault gate: times out / retries / raises typed BEFORE any
+        # payload byte is charged, so a failed read moves nothing (and an
+        # RC timeout tears the pair down so _setup below re-pays it)
+        self._admit("read", src, dst, sync=not async_read)
         # an async read must not stall the child's clock on a cold
         # connection: the setup cost is folded into the transfer's channel
         # time instead of charged to sim_time (the sync path pays it up
@@ -187,8 +260,10 @@ class Transport(abc.ABC):
         nbytes = pages.size * pages.dtype.itemsize
         sges = contiguous_runs(frames)
         ops = max(1, math.ceil(sges / self.max_sge))
-        self._charge("read", src, dst, nbytes,
-                     ops * self.op_latency() + nbytes / self.bandwidth(),
+        seconds = ops * self.op_latency() + nbytes / self.bandwidth()
+        seconds *= self._penalty(src, dst)
+        self.net.meter["page_pages_moved"] += int(np.asarray(frames).size)
+        self._charge("read", src, dst, nbytes, seconds,
                      ops=ops, sges=sges, async_read=async_read, setup=setup)
         return pages
 
@@ -198,9 +273,11 @@ class Transport(abc.ABC):
         the blob's own DC key, exactly like a VMA."""
         self.net.require_node(dst)
         self.net.check_target(dst, dc_key)
+        self._admit("read", src, dst)
         self._setup(src, dst, user=user)
         self._charge("read", src, dst, nbytes,
-                     self.op_latency() + nbytes / self.bandwidth())
+                     (self.op_latency() + nbytes / self.bandwidth())
+                     * self._penalty(src, dst))
 
     def rpc(self, src: str, dst: str, nbytes: int, fn, *args, **kwargs):
         """Two-sided call executed by the destination node (FaSST-style).
@@ -209,9 +286,11 @@ class Transport(abc.ABC):
         QP, so the control plane can no longer get free connections the
         data plane would have had to pay for."""
         self.net.require_node(dst)
+        self._admit("rpc", src, dst)
         self._setup(src, dst)
         self._charge("rpc", src, dst, nbytes,
-                     self.rpc_latency() + nbytes / self.bandwidth())
+                     (self.rpc_latency() + nbytes / self.bandwidth())
+                     * self._penalty(src, dst))
         return fn(*args, **kwargs)
 
     # -- metering -----------------------------------------------------------

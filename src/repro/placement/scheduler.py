@@ -24,6 +24,8 @@ from __future__ import annotations
 
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.net import NoNodesAvailable
+
 
 class RoundRobinScheduler:
     """Deterministic, exclusion-stable round-robin.
@@ -66,7 +68,7 @@ class RoundRobinScheduler:
              demand: Optional[Sequence[tuple]] = None):
         ranked = self._eligible(nodes, exclude)
         if not ranked:
-            raise RuntimeError("no live nodes")
+            raise NoNodesAvailable("no live nodes")
         idx, node = ranked[0]
         self._cursor = (idx + 1) % len(self._order)
         return node
@@ -116,7 +118,7 @@ class TransportAwareScheduler(RoundRobinScheduler):
              demand: Optional[Sequence[tuple]] = None):
         ranked = self._eligible(nodes, exclude)
         if not ranked:
-            raise RuntimeError("no live nodes")
+            raise NoNodesAvailable("no live nodes")
         if demand:
             # min() is stable: equal scores resolve to scan order, i.e. the
             # deterministic round-robin fallback

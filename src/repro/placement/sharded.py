@@ -34,7 +34,8 @@ from repro.core.pagetable import VMA
 from repro.fork.handle import ForkHandle, instantiate_child
 from repro.fork.policy import ForkPolicy
 from repro.fork.tree import build_fork_tree
-from repro.net import AccessRevoked, LeaseExpired
+from repro.net import (AccessRevoked, LeaseExpired, SeedUnavailable,
+                       TransportError)
 from repro.placement.policy import PlacementPolicy, SpreadPolicy
 from repro.placement.route import ReplicaSource, Router
 
@@ -160,7 +161,7 @@ class ShardedSeed:
                 continue
             try:
                 pairs.append((h, h.fetch_descriptor(child_node, policy)))
-            except (ConnectionError, AccessRevoked, LeaseExpired,
+            except (TransportError, AccessRevoked, LeaseExpired,
                     PermissionError):
                 continue
         return pairs
@@ -178,7 +179,7 @@ class ShardedSeed:
         policy = ForkPolicy.coerce(policy)
         pairs = self._live_descriptors(child_node, policy)
         if not pairs:
-            raise ConnectionError(
+            raise SeedUnavailable(
                 f"sharded seed {self.parent_nodes or '[]'}: no live replicas")
         primary, desc = pairs[self._rotation % len(pairs)]
         by_parent = {h.parent_node: (h, d) for h, d in pairs}

@@ -26,7 +26,9 @@ from typing import Any, Callable, Dict, List, Optional, Union
 import jax
 
 from repro.core.instance import ModelInstance
+from repro.core.pagetable import VMA
 from repro.fork import ForkHandle, ForkPolicy
+from repro.net import NoNodesAvailable, TransportError
 from repro.placement import (PlacementPolicy, ShardedSeed,
                              TransportAwareScheduler, route_demand)
 from repro.platform.node import NodeRuntime
@@ -187,7 +189,13 @@ class Coordinator:
                 node = self.pick_node(exclude=set(seed.parent_nodes))
             except RuntimeError:
                 break
-            rinst = src.resume_on(node, ForkPolicy(lazy=False))
+            try:
+                rinst = src.resume_on(node, ForkPolicy(lazy=False))
+            except TransportError:
+                # the source replica died (or its fabric flapped) mid-heal:
+                # stop growing this sweep, the next pass re-purges and
+                # retries from whatever survived
+                break
             lease = keep_alive if keep_alive is not None \
                 else self._seed_lease(src)
             seed.add_replica(node.prepare_fork(rinst, lease=lease))
@@ -202,6 +210,74 @@ class Coordinator:
         entry = rt.seeds.get(handle.handler_id) if rt is not None else None
         return entry.lease_duration if entry is not None \
             else DEFAULT_SEED_KEEPALIVE
+
+    # -- lease-driven recovery (the fault plane's rung 2) ---------------------
+
+    def _make_recovery(self, func: str):
+        """Build the ``ModelInstance.recover_owner`` hook for a forked child
+        of ``func``: when a remote read fails and no sibling replica can
+        serve (``repro.core.instance._recover_group`` rung 1), the
+        coordinator re-replicates the seed — replacement replicas inherit
+        the survivors' lease via ``_seed_lease`` — or redeploys it from
+        pristine state, then re-stamps the VMA's missing pages onto a live
+        parent.  Returns True iff the child can retry its read."""
+        def recover(inst: ModelInstance, vma: VMA, lost_owner: str) -> bool:
+            seed = self._fresh_seed(func)
+            if seed is None:
+                if not self.auto_seed:
+                    return False
+                try:
+                    seed = self.deploy_seed(func, replicas=self.seed_replicas,
+                                            placement=self.seed_placement)
+                except (NoNodesAvailable, TransportError):
+                    return False
+                self._lease_event(func, "reseeded")
+            elif (isinstance(seed, ShardedSeed)
+                    and seed.replicas < seed.target_replicas):
+                # heal the shard set now, not at the next gc() tick — the
+                # restamp below then has a spare replica to point at
+                self._replicate(func, seed)
+            return self._restamp_from_seed(inst, vma, seed, lost_owner)
+        return recover
+
+    def _restamp_from_seed(self, inst: ModelInstance, vma: VMA, seed: Seed,
+                           lost_owner: str) -> bool:
+        """Point ``vma``'s still-missing remote pages at a live seed
+        replica: fetch that replica's descriptor (minting a fresh DC key)
+        and rewrite the route — frames, hop-1 owner, DC key, ancestry —
+        for the missing remote pages ONLY.  Resident and COW-dirty pages
+        are untouched, so a half-fetched VMA keeps its local state
+        (idempotent: re-running the restamp moves no extra bytes and
+        never double-charges the pagetable)."""
+        net = self.network
+        for h in _seed_handles(seed):
+            if h.parent_node not in net.nodes or h.parent_node == lost_owner:
+                continue
+            try:
+                desc = h.fetch_descriptor(inst.node, ForkPolicy())
+            except (TransportError, PermissionError):
+                continue
+            table = next((vd for vd in desc.vmas
+                          if vd["name"] == vma.name), None)
+            key = desc.extra.get("prepared_keys", {}).get(vma.name)
+            if table is None or key is None:
+                continue
+            fresh = VMA.from_table_dict(table)
+            # only pages the replica itself owns (hop 0 there) can be
+            # served at hop 1 here; a replica mid-restore contributes what
+            # it has and the next handle covers the rest on a later rung
+            remote = (vma.missing_mask() & (vma.owner_hop >= 1)
+                      & (fresh.owner_hop == 0))
+            if not remote.any():
+                continue
+            vma.frames[remote] = fresh.frames[remote]
+            vma.owner_hop[remote] = 1
+            vma.dc_keys[1] = key
+            vma.ancestry = [h.parent_node] + list(desc.ancestry)
+            vma.version += 1
+            net.meter["recovery.reseed_fetches"] += 1
+            return True
+        return False
 
     def acquire_instance(self, func: str, *, node: Optional[NodeRuntime] = None,
                          policy: str = "fork", lazy: bool = True,
@@ -223,13 +299,22 @@ class Coordinator:
         if inst is None and policy == "fork":
             seed = self._fresh_seed(func)
             if seed is not None:
-                inst = seed.resume_on(node, ForkPolicy(
-                    lazy=lazy, prefetch=prefetch,
-                    reroute_backlog=self.reroute_backlog))
+                try:
+                    inst = seed.resume_on(node, ForkPolicy(
+                        lazy=lazy, prefetch=prefetch,
+                        reroute_backlog=self.reroute_backlog))
+                except TransportError:
+                    # every usable replica died between the freshness check
+                    # and the descriptor fetch — degrade to coldstart below.
+                    # Lease violations (PermissionError) stay loud: those are
+                    # capability bugs, not infrastructure faults.
+                    inst = None
                 if isinstance(seed, ShardedSeed):
                     # a replica can die between the freshness check and the
                     # fetch; the resume re-routes and records the victim
                     self._count_lost(func, seed.drain_lost())
+                if inst is not None:
+                    inst.recover_owner = self._make_recovery(func)
         if inst is None:
             inst = self.coldstart(func, node)
         return inst
@@ -275,11 +360,14 @@ class Coordinator:
                    and h.alive and not h.expired
                    for h in _seed_handles(seed))
 
-    def _fresh_seed(self, func: str) -> Optional[Seed]:
-        """The store's seed for ``func`` iff it can serve a fork right now.
-        A replica whose parent dropped out of the network is purged ON
-        SIGHT (not left for gc to eventually notice) and telemetered as
-        ``parent_lost``; a fully lost seed leaves the store immediately."""
+    def _purge_lost(self, func: str) -> Optional[Seed]:
+        """THE loss-accounting site: purge ``func``'s seed replicas whose
+        parent dropped out of the network, telemeter each loss as
+        ``parent_lost`` exactly once, and drop a fully lost seed from the
+        store.  Every lifecycle pass (_fresh_seed, _live_handle, gc) goes
+        through here FIRST, so a crashed parent is never misattributed to
+        the "reclaimed" bucket just because its cleared seed table also
+        reads as not-alive.  Returns the surviving seed, else None."""
         seed = self.seed_store.get(func)
         if seed is None:
             return None
@@ -293,13 +381,23 @@ class Coordinator:
             del self.seed_store[func]
             self._lease_event(func, "parent_lost")
             return None
+        return seed
+
+    def _fresh_seed(self, func: str) -> Optional[Seed]:
+        """The store's seed for ``func`` iff it can serve a fork right now.
+        A replica whose parent dropped out of the network is purged ON
+        SIGHT (not left for gc to eventually notice) and telemetered as
+        ``parent_lost``; a fully lost seed leaves the store immediately."""
+        seed = self._purge_lost(func)
+        if seed is None:
+            return None
         return seed if self._seed_fresh(seed) else None
 
     def _live_handle(self, func: str) -> Optional[Seed]:
         """The store's seed for ``func`` iff it is still registered at (at
         least one) parent; a seed reclaimed underneath the store is dropped
         (and telemetered as "reclaimed")."""
-        seed = self.seed_store.get(func)
+        seed = self._purge_lost(func)
         if seed is None:
             return None
         if not seed.alive:
@@ -336,10 +434,12 @@ class Coordinator:
         ``lease_nodes`` (per-node parent-side counters)."""
         now = self.clock()
         freed = {"seeds": 0, "cached": 0, "dangling": 0, "rereplicated": 0}
-        for func, seed in list(self.seed_store.items()):
+        for func in list(self.seed_store):
+            seed = self._purge_lost(func)
+            if seed is None:
+                freed["seeds"] += 1
+                continue
             if isinstance(seed, ShardedSeed):
-                seed.purge_lost(self.network.nodes)
-                self._count_lost(func, seed.drain_lost())
                 for h in list(seed.handles):
                     if h.expired or not h.alive:
                         self._lease_event(

@@ -18,7 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.memory.pool import PAGE_ELEMS, PagePool
-from repro.net import AccessRevoked, LeaseExpired
+from repro.net import AccessRevoked, AuthError, LeaseExpired, SeedGone
 
 DEFAULT_PAGE_CACHE_CAP = 65536     # sibling-cache entries (pages), LRU-bounded
 
@@ -108,7 +108,7 @@ class NodeRuntime:
         returns the descriptor's size and DC key for the follow-up read."""
         e = self.seeds.get(handler_id)
         if e is None or e.auth_key != auth_key:
-            raise PermissionError(f"bad seed credentials for {handler_id}")
+            raise AuthError(f"bad seed credentials for {handler_id}")
         if generation != e.generation:
             raise AccessRevoked(
                 f"seed {handler_id}: handle generation {generation} revoked "
@@ -130,7 +130,7 @@ class NodeRuntime:
                 f"extend must be positive seconds or None, got {extend!r}")
         e = self.seeds.get(handler_id)
         if e is None:
-            raise KeyError(f"seed {handler_id} is not registered "
+            raise SeedGone(f"seed {handler_id} is not registered "
                            "(already reclaimed?)")
         duration = extend if extend is not None else e.lease_duration
         now = self.clock()
@@ -325,14 +325,61 @@ class NodeRuntime:
         self._page_cache_rev.clear()
         self._page_cache_bytes = 0
 
+    def page_cache_drop_owner(self, owner: str) -> None:
+        """Drop EVERY cache entry keyed on ``owner`` (any dtype, any
+        frame) — the fleet-wide forget when a peer fail-stops.  Its frame
+        namespace died with it, and a restarted incarnation reusing the
+        same frame indices must never be served another seed's bytes."""
+        for key in [k for k in self._page_cache if k[0] == owner]:
+            local = self._page_cache.pop(key)
+            self._page_cache_rev.pop((key[1], local), None)
+            self._page_cache_bytes -= self._page_cache_entry_bytes(key)
+
     # -- failure ------------------------------------------------------------------
 
     def crash(self) -> None:
+        """Fail-stop this node.  The machine's memory dies with it, and so
+        must every piece of distributed state that references it:
+
+        * hosted instances become husks (their pool pages are gone; they
+          are NOT ``free()``d — free would broadcast invalidations and
+          return frames as if the machine were still up) and each one's
+          connection refcounts are released;
+        * the seed registry empties: outstanding ForkHandles read
+          ``alive == False`` and coordinators count the parent as lost;
+        * ``network.unregister`` destroys the DC targets and — via
+          ``ConnManager.drop_node`` — evicts every QP/DC context with a
+          slot here from BOTH endpoints' pools, so peers re-pay setup;
+        * every surviving peer drops its sibling page-cache entries keyed
+          on this node (``page_cache_drop_owner``).
+
+        Idempotent: a second crash of a dead node is a no-op."""
+        if not self.alive:
+            return
         self.alive = False
-        self.network.unregister(self.node_id)
+        net = self.network
+        for inst in list(self.instances.values()):
+            net.conn_release_user(inst._conn_user)
+            if inst.prefetch_engine is not None:
+                inst.prefetch_engine.discard()
+                inst.prefetch_engine = None
+            inst._owned_frames.clear()
+            inst._tensors.clear()
+            inst._tensor_versions.clear()
+            inst.aspace = {}
+        self.instances.clear()
+        self.seeds.clear()
+        self.clear_page_cache()
+        self._swapped.clear()
+        self._dc_pool.clear()
+        net.unregister(self.node_id)
+        for peer in net.nodes.values():
+            drop = getattr(peer, "page_cache_drop_owner", None)
+            if drop is not None:
+                drop(self.node_id)
 
     def memory_bytes(self) -> int:
-        return self.pool.bytes_allocated()
+        return 0 if not self.alive else self.pool.bytes_allocated()
 
 
 def make_auth_key() -> int:

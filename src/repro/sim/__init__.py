@@ -14,6 +14,7 @@ from .autoscaler import (AutoscalePolicy, ColdStart, ForkOnDemand, Hybrid,
                          KeepWarm)
 from .engine import (ReplayEngine, ReplayResult, SimFunction, build_cluster)
 from .events import EventLoop, SimClock
+from .faults import Crash, Degrade, FaultInjector, FaultPlan, Flap
 from .metrics import (TelemetryStream, Timeline, canonical_digest, cdf_points,
                       latency_row, percentile)
 from .trace import (SPIKE_660323, Invocation, Trace, correlated_spikes,
@@ -23,6 +24,7 @@ __all__ = [
     "AutoscalePolicy", "ColdStart", "ForkOnDemand", "Hybrid", "KeepWarm",
     "ReplayEngine", "ReplayResult", "SimFunction", "build_cluster",
     "EventLoop", "SimClock",
+    "Crash", "Degrade", "FaultInjector", "FaultPlan", "Flap",
     "TelemetryStream", "Timeline", "canonical_digest", "cdf_points",
     "latency_row", "percentile",
     "SPIKE_660323", "Invocation", "Trace", "correlated_spikes", "diurnal",

@@ -34,6 +34,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.net import ReproError
 from repro.net.model import NetModel
 from repro.net.network import Network
 from repro.placement.scheduler import RoundRobinScheduler
@@ -42,6 +43,7 @@ from repro.platform.node import NodeRuntime
 
 from .autoscaler import AutoscalePolicy
 from .events import EventLoop, SimClock
+from .faults import FaultInjector, FaultPlan
 from .metrics import (TelemetryStream, Timeline, canonical_digest,
                       latency_row)
 from .trace import Invocation, Trace
@@ -124,6 +126,10 @@ class ReplayResult:
     end_time: float
     events_run: int
     event_log_digest: str
+    # fault-plane roll-up: None when the replay ran without a FaultPlan, so
+    # fault-free summaries (and their digests) are byte-identical to
+    # pre-fault-plane replays
+    faults: Optional[dict] = None
 
     def summary(self) -> dict:
         """Deterministic, JSON-able digest (what benchmarks pin)."""
@@ -158,6 +164,7 @@ class ReplayResult:
             "end_time_s": round(self.end_time, 9),
             "events": self.events_run,
             "event_log_digest": self.event_log_digest,
+            **({"faults": self.faults} if self.faults is not None else {}),
         }
 
     def digest(self) -> str:
@@ -195,7 +202,8 @@ class ReplayEngine:
                  nodes: Optional[List[NodeRuntime]] = None,
                  scheduler=None, reroute_backlog: Optional[float] = None,
                  gc_every: float = 30.0, sample_every: float = 30.0,
-                 drain_margin: float = 120.0, keep_node_timelines: bool = False):
+                 drain_margin: float = 120.0, keep_node_timelines: bool = False,
+                 faults: Optional[FaultPlan] = None):
         self.trace = trace
         self.policy = policy
         self.seed = seed
@@ -230,6 +238,11 @@ class ReplayEngine:
         self.end_time = 0.0
         self._inflight = 0
         self._mem_peak_live: Dict[str, float] = {}
+        # fault plane: the plan is installed as net.faults at run() so the
+        # transports consult it; crashes ride the event loop (digest-visible)
+        self.faults = faults
+        self.injector: Optional[FaultInjector] = None
+        self.failures = 0
 
     # -- modeled lifecycle costs --------------------------------------------
 
@@ -241,21 +254,67 @@ class ReplayEngine:
 
     # -- event handlers ------------------------------------------------------
 
+    _PAYLOAD_KEYS = ("pages_rdma", "pages_rpc", "pages_cached",
+                     "prefetch_wasted")
+
+    def _payload_before(self, inst) -> Dict[str, int]:
+        return {k: inst.stats.get(k, 0) for k in self._PAYLOAD_KEYS}
+
+    def _fold_payload(self, inst, before: Dict[str, int]) -> None:
+        for k, v0 in before.items():
+            self.payload_pages[k] += inst.stats.get(k, 0) - v0
+
+    def _degrade_to_cold(self, inv: Invocation, failed_inst, before):
+        """The recovery chain's last rung: the fork path (or a mid-run
+        remote read) failed beyond repair, so fold the failed child's
+        partial payload stats (bytes it DID move stay accounted), free it,
+        and cold-boot a pristine container on a live node.  Returns None —
+        counting the invocation as failed — only when no live node can even
+        coldstart."""
+        if failed_inst is not None:
+            self._fold_payload(failed_inst, before)
+            if failed_inst.aspace:
+                failed_inst.free()
+        try:
+            inst = self.coord.coldstart(inv.func, self.coord.pick_node())
+        except ReproError:
+            self.failures += 1
+            return None
+        self.charge_coldstart(inv.func)
+        self.net.meter["degraded_cold"] += 1
+        return inst
+
     def _on_arrival(self, inv: Invocation) -> None:
         t0 = self.net.sim_time
-        kind, inst = self.policy.acquire(self, inv)
-        self.decisions[kind] += 1
+        try:
+            kind, inst = self.policy.acquire(self, inv)
+        except ReproError:
+            # the policy's own path is gone (e.g. every scheduler candidate
+            # crashed mid-trace): degrade straight to a coldstart
+            kind, inst = "degraded", self._degrade_to_cold(inv, None, {})
+            if inst is None:
+                self.decisions["failed"] += 1
+                return
         ready = self.net.sim_time
-        before = {k: inst.stats.get(k, 0)
-                  for k in ("pages_rdma", "pages_rpc", "pages_cached")}
+        before = self._payload_before(inst)
         fdef = self.coord.functions[inv.func]
-        fdef.behavior(inst, {})
+        try:
+            fdef.behavior(inst, {})
+        except ReproError:
+            # remote reads failed beyond the sibling/re-seed rungs
+            kind, inst = "degraded", self._degrade_to_cold(inv, inst, before)
+            if inst is None:
+                self.decisions["failed"] += 1
+                return
+            ready = self.net.sim_time
+            before = self._payload_before(inst)
+            fdef.behavior(inst, {})     # pristine local pages: no fabric
+        self.decisions[kind] += 1
         self.net.advance(fdef.exec_sim_time)
         done = self.net.sim_time
         self.latencies.setdefault(inv.func, []).append(done - t0)
         self.startups.setdefault(inv.func, []).append(ready - t0)
-        for k, v0 in before.items():
-            self.payload_pages[k] += inst.stats.get(k, 0) - v0
+        self._fold_payload(inst, before)
         self._inflight += 1
         f = self.functions[inv.func]
         hold_end = max(done, t0 + (f.hold_s if f.hold_s is not None
@@ -270,6 +329,12 @@ class ReplayEngine:
     def _on_complete(self, inv: Invocation, inst) -> None:
         self.policy.release(self, inv, inst)
         self._inflight -= 1
+
+    def _on_crash(self, node_id: str) -> None:
+        node = self.coord.nodes.get(node_id)
+        if node is not None and node.alive:
+            node.crash()
+            self.telemetry.emit(self.net.sim_time, "crash", node=node_id)
 
     def _gc_tick(self) -> None:
         freed = self.coord.gc()
@@ -288,6 +353,13 @@ class ReplayEngine:
     # -- run -----------------------------------------------------------------
 
     def run(self) -> ReplayResult:
+        if self.faults is not None:
+            # installed even when the plan is empty: the fig22 crash_rate=0
+            # gate proves a live-but-empty injector perturbs nothing (the
+            # zero plan draws no RNG, its penalty is an exact *1.0)
+            self.injector = FaultInjector(self.net, self.faults)
+            self.net.faults = self.injector
+            self.injector.schedule(self.loop, self._on_crash)
         self.policy.on_start(self)
         arrivals = self.trace.arrivals(self.loop.rng)
         for inv in arrivals:
@@ -329,4 +401,31 @@ class ReplayEngine:
             lease={f: dict(c) for f, c in self.coord.lease_telemetry.items()},
             payload_pages=dict(self.payload_pages),
             end_time=self.end_time, events_run=self.loop.events_run,
-            event_log_digest=self.loop.log_digest())
+            event_log_digest=self.loop.log_digest(),
+            faults=self._faults_rollup(len(arrivals)))
+
+    def _faults_rollup(self, invocations: int) -> Optional[dict]:
+        """Deterministic fault-plane summary section; None for fault-free
+        replays AND for installed-but-empty plans, so a zero-rate plan's
+        full summary digest is bit-identical to no plan at all."""
+        if self.faults is None or self.faults.empty():
+            return None
+        m = self.net.meter
+        return {
+            "plan": self.faults.describe(),
+            "crashes_fired": self.injector.crashes_fired,
+            "timeouts": int(m.get("timeouts", 0)),
+            "retries": int(m.get("retries", 0)),
+            "backoff_wait_s": round(float(m.get("backoff_wait_s", 0.0)), 9),
+            "recovery": {
+                "pages": int(m.get("recovery.pages", 0)),
+                "bytes": int(m.get("recovery.bytes", 0)),
+                "sibling": int(m.get("recovery.sibling", 0)),
+                "reseed": int(m.get("recovery.reseed", 0)),
+                "reseed_fetches": int(m.get("recovery.reseed_fetches", 0)),
+            },
+            "degraded": int(m.get("degraded_cold", 0)),
+            "failed": self.failures,
+            "completion_rate": round(
+                1.0 - self.failures / max(1, invocations), 6),
+        }
