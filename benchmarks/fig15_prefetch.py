@@ -19,10 +19,10 @@ Three sweeps over the same function working set:
 from __future__ import annotations
 
 import argparse
-import json
 import sys
 
-from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
+from benchmarks.common import (deploy_parent, make_cluster, merge_bench_json,
+                               timed, touch_fraction)
 
 FN = "image"
 TOUCH = 0.6
@@ -88,7 +88,7 @@ def run_sweeps(write_json=None):
         sweep[mode] = row
 
     summary = {
-        "schema": "paging-bench/v1",
+        "schema": "paging-bench/v2",
         "rows": rows,
         "overlap": {
             "window": OVERLAP_W,
@@ -107,13 +107,13 @@ def run_sweeps(write_json=None):
     }
     if write_json:
         # wall time is machine noise — the tracked artifact keeps only the
-        # deterministic sim/meter fields so diffs mean real regressions
+        # deterministic sim/meter fields so diffs mean real regressions.
+        # BENCH_paging.json is shared: fig16 owns "cow_fused" and the
+        # roofline owns "paging_roofline", so merge our sections only.
         tracked = dict(summary)
         tracked["rows"] = [{k: v for k, v in r.items() if k != "us_per_call"}
                            for r in rows]
-        with open(write_json, "w") as f:
-            json.dump(tracked, f, indent=2, sort_keys=True)
-            f.write("\n")
+        merge_bench_json(write_json, tracked)
     return rows, summary
 
 

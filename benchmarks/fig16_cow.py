@@ -1,11 +1,33 @@
 """Figures 16+17: COW (on-demand) vs non-COW (read-everything-upfront):
-latency and throughput across touch ratios."""
+latency and throughput across touch ratios — plus ``fig16.cow.fused``, the
+kernel-speedup row: the per-page host commit loop vs ONE fused cow_scatter
+commit at equal bytes (the tentpole's on-device COW commit path).
+
+``--smoke`` merges the ``cow_fused`` section into ``BENCH_paging.json``
+(deterministic byte/op fields + the huge-margin ``fused_beats_host``
+boolean; wall times are printed, never pinned) and exits non-zero if the
+fused commit fails to beat the host loop.
+"""
 from __future__ import annotations
 
-from benchmarks.common import deploy_parent, make_cluster, timed, touch_fraction
+import argparse
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.common import (deploy_parent, make_cluster, merge_bench_json,
+                               timed, touch_fraction)
 from repro.fork import ForkPolicy
+from repro.memory.pool import PagePool
 
 FN = "image"
+
+# fused-commit comparison shape: small pages make the per-page python loop's
+# overhead honest (one write_pages call per page, the pre-fusion commit
+# shape) while the fused side lands the same bytes in one kernel launch
+FUSED_PAGE_ELEMS = 4096
+FUSED_PAGES = 1024
 
 
 def run():
@@ -37,3 +59,68 @@ def run():
             eager_mb=round(eager_bytes / 2**20, 1),
             thpt_ratio=round(eager_bytes / max(lazy_bytes, 1), 2)))
     return rows
+
+
+def cow_fused():
+    """The fused-commit row: per-page host numpy commit loop vs one fused
+    cow_scatter commit (device pool, kernels/dispatch-selected backend) at
+    equal bytes.  Returns (row, wall) where ``row`` carries only the
+    deterministic pinned fields and ``wall`` the measured times."""
+    import warnings
+    rng = np.random.default_rng(0)
+    pages = rng.standard_normal((FUSED_PAGES, FUSED_PAGE_ELEMS)) \
+        .astype(np.float32)
+    frames = np.arange(FUSED_PAGES, dtype=np.int32)
+    nbytes = pages.nbytes
+
+    host = PagePool(page_elems=FUSED_PAGE_ELEMS, initial_frames=FUSED_PAGES)
+    host._ensure_capacity("float32", FUSED_PAGES)
+    t0 = time.perf_counter()
+    for i in range(FUSED_PAGES):        # the pre-fusion commit shape
+        host.write_pages("float32", frames[i:i + 1], pages[i:i + 1])
+    t_host = time.perf_counter() - t0
+
+    dev = PagePool(page_elems=FUSED_PAGE_ELEMS, initial_frames=FUSED_PAGES,
+                   device=True)
+    dev._ensure_capacity("float32", FUSED_PAGES)
+    with warnings.catch_warnings():     # off-TPU fallback is the point here
+        warnings.simplefilter("ignore", RuntimeWarning)
+        dev.write_pages("float32", frames, pages)   # warm the jit cache
+        t1 = time.perf_counter()
+        dev.write_pages("float32", frames, pages)
+        t_fused = time.perf_counter() - t1
+
+    same = np.array_equal(np.asarray(dev.frames_array("float32")),
+                          host._frames["float32"])
+    row = dict(
+        name="fig16.cow.fused",
+        pages=FUSED_PAGES, bytes=nbytes,
+        host_ops=FUSED_PAGES,           # one commit call per page
+        fused_ops=1,                    # one fused scatter for the run table
+        equal_bytes=True, bitwise_equal=bool(same),
+        fused_beats_host=bool(t_fused < t_host))
+    return row, {"host_us": int(t_host * 1e6), "fused_us": int(t_fused * 1e6)}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="merge the cow_fused section into the BENCH "
+                         "artifact and fail unless the fused commit beats "
+                         "the per-page host loop at equal bytes")
+    ap.add_argument("--json", default="BENCH_paging.json",
+                    help="tracked artifact to merge the section into")
+    args = ap.parse_args()
+    row, wall = cow_fused()
+    print(",".join(f"{k}={v}" for k, v in row.items()))
+    print(f"fused commit {wall['fused_us']}us vs per-page host loop "
+          f"{wall['host_us']}us at {row['bytes']} bytes")
+    merge_bench_json(args.json, {"cow_fused": row})
+    print(f"merged cow_fused into {args.json}")
+    if args.smoke:
+        return 0 if (row["fused_beats_host"] and row["bitwise_equal"]) else 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -18,6 +18,7 @@ import numpy as np
 from repro.core import descriptor as desc_mod
 from repro.core.pagetable import F_DIRTY, F_PRESENT, VMA, AddressSpace
 from repro.core.prefetch import PrefetchEngine
+from repro.kernels.cow_scatter import ops as cow_ops
 from repro.memory import paging
 from repro.net import AccessRevoked, RecoveryFailed, TransportError
 
@@ -73,7 +74,8 @@ class ModelInstance:
         self.stats = {"faults": 0, "pages_rdma": 0, "pages_rpc": 0,
                       "pages_cached": 0, "pages_local": 0, "cow_pages": 0,
                       "prefetch_issued": 0, "prefetch_used": 0,
-                      "prefetch_wasted": 0}
+                      "prefetch_wasted": 0,
+                      "assemble_full": 0, "assemble_patch_pages": 0}
         node.instances[self.instance_id] = self
 
     # ------------------------------------------------------------------
@@ -294,7 +296,8 @@ class ModelInstance:
                       prefetch: Optional[int] = None) -> jax.Array:
         vma = self.aspace[name]
         t = self._tensors.get(name)
-        if t is not None and self._tensor_versions.get(name) == vma.version:
+        v0 = self._tensor_versions.get(name)
+        if t is not None and v0 == vma.version:
             # the version gate: residency/content unchanged since assembly
             # (e.g. only disjoint VMAs faulted) — skip the full-pool gather
             return t
@@ -303,8 +306,22 @@ class ModelInstance:
         miss = vma.missing_pages()
         if miss.size:
             self.fetch_pages(name, miss, prefetch)
-        pages = self.node.pool.read_pages(vma.dtype, vma.frames)
-        t = paging.from_pages(pages, vma.shape, vma.dtype)
+        pool = self.node.pool
+        changed = vma.changed_since(v0) if (t is not None and
+                                            v0 is not None) else None
+        if changed is not None and changed.size * 2 <= vma.npages:
+            # incremental reassembly: a version bump stamps exactly the
+            # pages that moved (VMA.page_version), so patch those into the
+            # cached tensor instead of re-gathering the whole VMA
+            rows = pool.read_pages(vma.dtype, vma.frames[changed])
+            t = cow_ops.scatter_patch(t, changed, rows,
+                                      page_elems=pool.page_elems)
+            self.stats["assemble_patch_pages"] += int(changed.size)
+        else:
+            # fused gather->reassemble: pages land directly in the
+            # destination layout, no intermediate page-list concatenate
+            t = pool.assemble(vma.dtype, vma.frames, vma.shape)
+            self.stats["assemble_full"] += 1
         self._tensors[name] = t
         self._tensor_versions[name] = vma.version
         return t

@@ -38,6 +38,12 @@ class VMA:
     version: int = 0             # bumped on every residency/content change;
                                  # lets callers cache assembled tensors and
                                  # reassemble only when pages actually moved
+    page_version: Optional[np.ndarray] = None
+                                 # (npages,) int64 — the VMA version at which
+                                 # each page last changed (residency or
+                                 # dirty).  Lets the assembler patch exactly
+                                 # the pages that moved since a cached
+                                 # snapshot instead of rebuilding the tensor
     # -- route (repro.placement): per-VMA owner chain + transport ----------
     ancestry: List[str] = dataclasses.field(default_factory=list)
                                  # hop h reads from ancestry[h-1]; empty =
@@ -45,6 +51,10 @@ class VMA:
     transport: Optional[str] = None
                                  # page-fetch transport for THIS VMA; None =
                                  # the instance/policy default
+
+    def __post_init__(self):
+        if self.page_version is None:
+            self.page_version = np.zeros(self.npages, np.int64)
 
     @classmethod
     def new_local(cls, name, shape, dtype, frames):
@@ -157,10 +167,17 @@ class VMA:
         self.frames[pages] = local_frames
         self.flags[pages] |= F_PRESENT
         self.version += 1
+        self.page_version[pages] = self.version
 
     def mark_dirty(self, pages):
         self.flags[pages] |= F_DIRTY
         self.version += 1
+        self.page_version[pages] = self.version
+
+    def changed_since(self, version: int) -> np.ndarray:
+        """Pages whose residency/content changed after VMA version
+        ``version`` — the incremental-reassembly work list."""
+        return np.nonzero(self.page_version > version)[0].astype(np.int32)
 
     def table_dict(self) -> dict:
         return {

@@ -177,8 +177,11 @@ class PrefetchEngine:
             elif entry.complete_at > net.sim_time:
                 keep.append(entry)
                 continue
-            local = inst._adopt_pages(vma, entry.pages[still],
-                                      entry.data[still])
+            # full landings (the common case) adopt the payload buffer as
+            # is — the fancy-index copy only happens when a COW raced a
+            # page out of the entry
+            payload = entry.data if still.all() else entry.data[still]
+            local = inst._adopt_pages(vma, entry.pages[still], payload)
             # publish to the sibling cache like the sync path — but only
             # if the owner's DC target is still live.  A free/reclaim
             # between issue and drain broadcasts a cache drop; putting

@@ -1,3 +1,7 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Kernel layer: the fault handler's fused data plane (page_gather /
+# cow_scatter, per-page and run-table variants) plus serving decode's
+# paged_attention.  Each kernel ships <name>/kernel.py (Pallas TPU),
+# ref.py (pure-jnp oracle) and ops.py (public wrapper); backend selection
+# and the chosen-impl meters live in kernels/dispatch.py — see
+# docs/kernels.md for the contracts.
+from repro.kernels import dispatch  # noqa: F401

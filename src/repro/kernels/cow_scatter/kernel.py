@@ -24,6 +24,15 @@ def _scatter_kernel(pt_ref, pages_ref, frames_ref, out_ref):
     out_ref[...] = pages_ref[...]
 
 
+def _scatter_runs_kernel(starts_ref, lens_ref, offs_ref, pages_ref,
+                         frames_ref, out_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j < lens_ref[i])
+    def _():
+        out_ref[...] = pages_ref[...]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
 def cow_scatter(frames, page_ids, pages, *, interpret: bool = True):
     """frames: (F, E) pool; page_ids: (n,) int32 unique; pages: (n, E)."""
@@ -50,4 +59,57 @@ def cow_scatter(frames, page_ids, pages, *, interpret: bool = True):
         input_output_aliases={2: 0},      # alias frames input -> output
         interpret=interpret,
     )(page_ids.astype(jnp.int32), src, dst)
+    return out.reshape(F, E)
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "interpret"),
+                   donate_argnums=(0,))
+def cow_scatter_runs(frames, starts, lens, offs, pages, *, max_len: int,
+                     interpret: bool = True):
+    """Run-table (doorbell-batched) COW commit: freshly-COW'd pages land in
+    their allocated frame extents as one fused scatter per run table — the
+    inverse of :func:`page_gather_runs`.
+
+    frames: (F, E) pool; starts/lens/offs: (num_runs,) int32 describing
+    contiguous destination extents (``lens >= 1``, runs must not overlap —
+    each dirty page gets a fresh frame from the allocator); pages:
+    (sum(lens), E) payload, run-major.  Grid step (i, j) writes payload row
+    ``offs[i] + j`` into frame ``starts[i] + j``; steps past a run's end
+    clamp to the run's last block (just written) and skip the store, so the
+    aliased pool content outside the runs is untouched.
+    """
+    F, E = frames.shape
+    assert E % LANE == 0, f"page_elems must be lane-aligned, got {E}"
+    R = E // LANE
+    num_runs = starts.shape[0]
+    n = pages.shape[0]
+    src = pages.reshape(n, R, LANE).astype(frames.dtype)
+    dst = frames.reshape(F, R, LANE)
+
+    def _clamp(i, j, lens):
+        return jnp.minimum(j, lens[i] - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(num_runs, max_len),
+        in_specs=[
+            pl.BlockSpec((1, R, LANE),
+                         lambda i, j, starts, lens, offs:
+                         (offs[i] + _clamp(i, j, lens), 0, 0)),      # pages
+            pl.BlockSpec((1, R, LANE),
+                         lambda i, j, starts, lens, offs:
+                         (starts[i] + _clamp(i, j, lens), 0, 0)),    # frames
+        ],
+        out_specs=pl.BlockSpec((1, R, LANE),
+                               lambda i, j, starts, lens, offs:
+                               (starts[i] + _clamp(i, j, lens), 0, 0)),
+    )
+    out = pl.pallas_call(
+        _scatter_runs_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((F, R, LANE), frames.dtype),
+        input_output_aliases={4: 0},      # alias frames input -> output
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lens.astype(jnp.int32),
+      offs.astype(jnp.int32), src, dst)
     return out.reshape(F, E)

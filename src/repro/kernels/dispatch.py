@@ -1,0 +1,116 @@
+"""Backend resolution + metering for the kernel layer.
+
+Every ``ops.py`` wrapper routes its ``backend=`` argument through
+:func:`resolve_backend` so the dispatch rules live in ONE place:
+
+``auto``       the compiled Pallas kernel when the host platform can compile
+               it (TPU), else the fused-XLA ``jnp`` fallback — the fastest
+               *correct* path everywhere.  The fallback is announced once
+               per kernel (`warnings.warn`), never silently.
+``kernel``     force the Pallas kernel; off-TPU it runs in interpret mode
+               (announced once — interpret is a validation tool, orders of
+               magnitude slower than either real path).
+``interpret``  force Pallas interpret mode (kernel-vs-ref parity tests).
+``jnp``        force the fused-XLA fallback.
+``ref``        the pure-jnp oracle (no jit contract, reference semantics).
+
+The *chosen* implementation is counted in a module-level meter
+(``kernel.{name}.{impl}``) so callers — the fault handler surfaces these
+through ``Network.meter`` — can prove which data plane actually ran: a
+deployment that thinks it is running compiled kernels but is interpreting
+(or falling back) shows up in the meters, not just in wall time.
+"""
+from __future__ import annotations
+
+import warnings
+from collections import Counter
+from typing import Optional, Set, Tuple
+
+import jax
+
+# impl names recorded in the meter / returned by resolve_backend
+IMPL_KERNEL = "pallas"         # compiled Pallas (TPU)
+IMPL_INTERPRET = "interpret"   # Pallas interpret mode (emulation)
+IMPL_JNP = "jnp"               # fused XLA fallback (jit'd jnp)
+IMPL_REF = "ref"               # pure-jnp oracle
+
+BACKENDS = ("auto", "kernel", "interpret", "jnp", "ref")
+
+_meter: Counter = Counter()
+_warned: Set[Tuple[str, str]] = set()
+
+
+def kernel_available() -> bool:
+    """Can the Pallas TPU kernels actually *compile* here?"""
+    return jax.default_backend() == "tpu"
+
+
+def resolve_backend(backend: str, *, kernel_name: str) -> Tuple[str, bool]:
+    """Map a requested ``backend`` to ``(impl, interpret)``.
+
+    ``impl`` is one of ``pallas | interpret | jnp | ref``; ``interpret`` is
+    the flag to pass to the Pallas entry point when ``impl`` is a Pallas
+    flavor.  Resolution is recorded in the kernel meter.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r} for {kernel_name}; "
+            f"expected one of {BACKENDS}")
+    if backend == "auto":
+        if kernel_available():
+            impl = IMPL_KERNEL
+        else:
+            impl = IMPL_JNP
+            _warn_once(kernel_name, "auto",
+                       f"{kernel_name}: compiled Pallas kernel unavailable on "
+                       f"backend={jax.default_backend()!r}; using the fused "
+                       f"XLA (jnp) fallback")
+    elif backend == "kernel":
+        if kernel_available():
+            impl = IMPL_KERNEL
+        else:
+            impl = IMPL_INTERPRET
+            _warn_once(kernel_name, "kernel",
+                       f"{kernel_name}: backend='kernel' off-TPU runs the "
+                       f"Pallas kernel in INTERPRET mode (validation only, "
+                       f"not a performance path)")
+    elif backend == "interpret":
+        impl = IMPL_INTERPRET
+    elif backend == "jnp":
+        impl = IMPL_JNP
+    else:
+        impl = IMPL_REF
+    _meter[f"kernel.{kernel_name}.{impl}"] += 1
+    return impl, impl == IMPL_INTERPRET
+
+
+def _warn_once(kernel_name: str, requested: str, msg: str) -> None:
+    key = (kernel_name, requested)
+    if key in _warned:
+        return
+    _warned.add(key)
+    warnings.warn(msg, RuntimeWarning, stacklevel=4)
+
+
+def record(kernel_name: str, event: str, n: int = 1) -> None:
+    """Count a kernel-layer event (e.g. pages moved by an impl)."""
+    _meter[f"kernel.{kernel_name}.{event}"] += n
+
+
+def kernel_meters(prefix: Optional[str] = None) -> dict:
+    """Snapshot of the kernel meter, optionally filtered by prefix."""
+    if prefix is None:
+        return dict(_meter)
+    return {k: v for k, v in _meter.items() if k.startswith(prefix)}
+
+
+def drain_meters_into(meter) -> None:
+    """Fold (and clear) the kernel meter into a Counter-like ``meter`` —
+    how the fault handler surfaces backend choices in ``Network.meter``."""
+    for k, v in _meter.items():
+        meter[k] += v
+    _meter.clear()
+
+
+def reset_meters() -> None:
+    _meter.clear()

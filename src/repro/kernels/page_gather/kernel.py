@@ -25,6 +25,14 @@ def _copy_kernel(pt_ref, src_ref, out_ref):
     out_ref[...] = src_ref[...]
 
 
+def _copy_runs_kernel(starts_ref, lens_ref, offs_ref, src_ref, out_ref):
+    i, j = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(j < lens_ref[i])
+    def _():
+        out_ref[...] = src_ref[...]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def page_gather(frames, page_ids, *, interpret: bool = True):
     """frames: (F, page_elems); page_ids: (n,) int32 -> (n, page_elems)."""
@@ -49,3 +57,52 @@ def page_gather(frames, page_ids, *, interpret: bool = True):
         interpret=interpret,
     )(page_ids.astype(jnp.int32), src)
     return out.reshape(n, E)
+
+
+@functools.partial(jax.jit, static_argnames=("max_len", "n_out", "interpret"))
+def page_gather_runs(frames, starts, lens, offs, *, max_len: int, n_out: int,
+                     interpret: bool = True):
+    """Run-table (doorbell-batched) gather: the frame-id table arrives as
+    maximal contiguous runs — exactly the SGE list PR 3's fault handler
+    posts — instead of one id per page.
+
+    frames: (F, page_elems); starts/lens/offs: (num_runs,) int32 with
+    ``lens >= 1`` (empty runs are filtered at the ops layer) and
+    ``offs = exclusive cumsum(lens)``; ``n_out = sum(lens)`` pages out.
+
+    Grid is (runs, max_len): step (i, j) copies pool frame
+    ``starts[i] + j`` into output slot ``offs[i] + j`` while ``j`` is
+    inside run i, so one scalar-prefetched table drives the whole extent
+    run HBM->VMEM->HBM with no per-page host dispatch.  Steps past a
+    run's end clamp their index map to the run's last block (already
+    written at step ``lens[i]-1``) and skip the store.
+    """
+    F, E = frames.shape
+    assert E % LANE == 0, f"page_elems must be lane-aligned, got {E}"
+    R = E // LANE
+    num_runs = starts.shape[0]
+    src = frames.reshape(F, R, LANE)
+
+    def _clamp(i, j, lens):
+        return jnp.minimum(j, lens[i] - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(num_runs, max_len),
+        in_specs=[
+            pl.BlockSpec((1, R, LANE),
+                         lambda i, j, starts, lens, offs:
+                         (starts[i] + _clamp(i, j, lens), 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, R, LANE),
+                               lambda i, j, starts, lens, offs:
+                               (offs[i] + _clamp(i, j, lens), 0, 0)),
+    )
+    out = pl.pallas_call(
+        _copy_runs_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_out, R, LANE), frames.dtype),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), lens.astype(jnp.int32),
+      offs.astype(jnp.int32), src)
+    return out.reshape(n_out, E)

@@ -1,21 +1,61 @@
 """Paged memory pools — the "physical memory" of a node.
 
-A ``PagePool`` holds, per dtype, a single device-resident frames array of
-shape (num_frames, PAGE_ELEMS).  Tensors are packed into pages
+A ``PagePool`` holds, per dtype, a single frames array of shape
+(num_frames, PAGE_ELEMS).  Tensors are packed into pages
 (memory/paging.py); page tables (core/pagetable.py) map tensor pages to
 frames.  This is the analogue of the parent's physical memory that MITOSIS
 children read over RDMA.
+
+Two flavors share one interface:
+
+* **host pool** (default) — frames are a host numpy array mutated in
+  place.  The data plane is *run-coalesced*: gathers and scatters are
+  decomposed into maximal contiguous extents and moved as slice copies
+  (one memcpy per extent) instead of per-page fancy indexing, mirroring
+  on the CPU exactly what the doorbell-batched wire path does with SGEs.
+* **device pool** (``device=True``) — frames are a device (jnp) array and
+  the data plane routes through the Pallas kernels: ``write_pages`` is a
+  ``cow_scatter`` commit, ``read_pages``/``assemble`` are ``page_gather``
+  launches (compiled on TPU, fused-XLA elsewhere — kernels/dispatch.py).
+  This is the §5 "CPU out of the byte-moving loop" configuration.
+
+``assemble`` is the fused gather->reassemble path: faulted pages land
+directly in the destination tensor layout, skipping the intermediate
+page-list concatenate the legacy ``read_pages`` + ``from_pages`` pair
+materialized.
 """
 from __future__ import annotations
 
 import bisect
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch
+from repro.kernels.cow_scatter.ops import cow_scatter, cow_scatter_runs
+from repro.kernels.page_gather.ops import (gather_assemble, page_gather,
+                                           page_gather_runs)
+
 PAGE_ELEMS = 32768  # elements per page (128 KiB fp32 / 64 KiB bf16)
+
+# host gather/scatter switches to per-extent slice copies when the average
+# run is at least this long; shorter runs stay on one fancy-index op (the
+# python loop per run would dominate)
+HOST_RUN_MIN_AVG = 4
+
+
+def frame_runs(frames) -> Tuple[np.ndarray, np.ndarray]:
+    """Decompose a frame list into maximal contiguous runs: (starts, lens).
+    The doorbell/SGE shape — shared by the host slice-copy data plane, the
+    run-table kernels, and the paging roofline's bucket accounting."""
+    idx = np.atleast_1d(np.asarray(frames, np.int64)).ravel()
+    if idx.size == 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.int64)
+    breaks = np.nonzero(np.diff(idx) != 1)[0] + 1
+    bounds = np.concatenate([[0], breaks, [idx.size]])
+    return idx[bounds[:-1]].copy(), np.diff(bounds)
 
 
 class OutOfFrames(RuntimeError):
@@ -23,12 +63,20 @@ class OutOfFrames(RuntimeError):
 
 
 class PagePool:
-    """Frames are held as a host numpy array (in-place writes — this is the
-    node's simulated physical memory); reads hand out jnp arrays.  On real
-    TPU the pool is a device buffer updated by the cow_scatter kernel."""
+    """Frames are held as a host numpy array (in-place writes — the node's
+    simulated physical memory) or, with ``device=True``, as a device array
+    whose data plane is the page_gather/cow_scatter kernels.
+
+    ``kernel_backend`` is the dispatch request for device-pool kernel
+    launches (see kernels/dispatch.py); ``meter`` is an optional
+    Counter-like that receives the ``kernel.{name}.{impl}`` choice counts
+    and ``pool.*`` data-plane counters (NodeRuntime wires the network
+    meter in, so benchmarks see which backend actually moved the bytes).
+    """
 
     def __init__(self, page_elems: int = PAGE_ELEMS, grow_frames: int = 256,
-                 initial_frames: int = 0):
+                 initial_frames: int = 0, device: bool = False,
+                 kernel_backend: str = "auto", meter=None):
         self.page_elems = page_elems
         self.grow_frames = grow_frames
         # reserve this many frames per dtype up front: np.zeros is lazy
@@ -36,7 +84,10 @@ class PagePool:
         # touched, while every growth step copies the whole pool — replay
         # clusters reserve their working set and never pay a copy
         self.initial_frames = initial_frames
-        self._frames: Dict[str, np.ndarray] = {}    # dtype name -> (F, page_elems)
+        self.device = device
+        self.kernel_backend = kernel_backend
+        self.meter = meter
+        self._frames: Dict[str, object] = {}    # dtype name -> (F, page_elems)
         self._free: Dict[str, List[int]] = {}       # kept sorted ascending
         self._allocated: Dict[str, set] = {}
 
@@ -49,10 +100,21 @@ class PagePool:
         # numpy has no bfloat16: store via jax's extended dtype view
         return jnp.dtype(dt)
 
+    def _count(self, key: str, n: int = 1) -> None:
+        if self.meter is not None:
+            self.meter[key] += n
+
+    def _drain_kernel_meters(self) -> None:
+        # surface the dispatch layer's chosen-impl counts (recorded by the
+        # ops call that just ran) in this pool's meter
+        if self.meter is not None:
+            dispatch.drain_meters_into(self.meter)
+
     def _ensure_capacity(self, dt: str, n: int):
         if dt not in self._frames:
-            self._frames[dt] = np.zeros((self.initial_frames, self.page_elems),
-                                        dtype=self._np_dtype(dt))
+            zeros = jnp.zeros if self.device else np.zeros
+            self._frames[dt] = zeros((self.initial_frames, self.page_elems),
+                                     dtype=self._np_dtype(dt))
             self._free[dt] = list(range(self.initial_frames))
             self._allocated[dt] = set()
         while len(self._free[dt]) < n:
@@ -62,9 +124,9 @@ class PagePool:
             # churns thousands of instances — doubling keeps it O(F)
             grow = max(self.grow_frames, n - len(self._free[dt]),
                        old.shape[0])
-            self._frames[dt] = np.concatenate(
-                [old, np.zeros((grow, self.page_elems),
-                               dtype=old.dtype)])
+            xp = jnp if self.device else np
+            self._frames[dt] = xp.concatenate(
+                [old, xp.zeros((grow, self.page_elems), dtype=old.dtype)])
             self._free[dt].extend(range(old.shape[0], old.shape[0] + grow))
 
     # -- alloc/free ----------------------------------------------------------
@@ -163,40 +225,145 @@ class PagePool:
     # -- data plane ----------------------------------------------------------
 
     def write_pages(self, dtype, frames, pages) -> None:
+        """COW-commit ``pages`` into ``frames``.  Device pools route through
+        the cow_scatter kernel (one fused scatter per run table); host pools
+        land each contiguous extent as one slice copy."""
         dt = self._dt(dtype)
         idx = np.asarray(frames, np.int32)
-        if isinstance(pages, np.ndarray) and pages.dtype == self._frames[dt].dtype:
-            self._frames[dt][idx] = pages      # host fast path: no copy/cast
-        else:
-            self._frames[dt][idx] = np.asarray(
+        if idx.size == 0:
+            return
+        self._count("pool.scatter_pages", int(idx.size))
+        if self.device:
+            payload = jnp.asarray(np.asarray(pages)) \
+                if isinstance(pages, np.ndarray) else jnp.asarray(pages)
+            starts, lens = frame_runs(idx)
+            if starts.size * 2 <= idx.size:
+                self._frames[dt] = cow_scatter_runs(
+                    self._frames[dt], starts, lens, payload,
+                    backend=self.kernel_backend)
+            else:
+                self._frames[dt] = cow_scatter(
+                    self._frames[dt], jnp.asarray(idx), payload,
+                    backend=self.kernel_backend)
+            self._drain_kernel_meters()
+            return
+        dst = self._frames[dt]
+        if not (isinstance(pages, np.ndarray) and pages.dtype == dst.dtype):
+            pages = np.asarray(
                 pages.astype(dt) if hasattr(pages, "astype") else pages)
+        starts, lens = frame_runs(idx)
+        if starts.size * HOST_RUN_MIN_AVG <= idx.size:
+            # extent-run commit: one memcpy per contiguous run
+            self._count("pool.scatter_runs", int(starts.size))
+            o = 0
+            for s, l in zip(starts.tolist(), lens.tolist()):
+                dst[s:s + l] = pages[o:o + l]
+                o += l
+        else:
+            dst[idx] = pages
 
     def write_rows(self, dtype, frames, slots, rows, row_elems: int) -> None:
         """In-place row update within pages: frames (B,), slots (B,),
         rows (B, row_elems). Used by the serving engine's token appends."""
         dt = self._dt(dtype)
+        fidx = np.asarray(frames, np.int32)
+        sidx = np.asarray(slots, np.int32)
+        if self.device:
+            F = self._frames[dt].shape[0]
+            view = self._frames[dt].reshape(F, -1, row_elems)
+            self._frames[dt] = view.at[jnp.asarray(fidx),
+                                       jnp.asarray(sidx)].set(
+                jnp.asarray(rows).astype(view.dtype)).reshape(F, -1)
+            return
         F = self._frames[dt].shape[0]
         view = self._frames[dt].reshape(F, -1, row_elems)
-        view[np.asarray(frames, np.int32), np.asarray(slots, np.int32)] = \
+        view[fidx, sidx] = \
             np.asarray(rows.astype(dt) if hasattr(rows, "astype") else rows)
+
+    def _gather_host(self, dt: str, idx: np.ndarray,
+                     out: Optional[np.ndarray] = None) -> np.ndarray:
+        """Run-coalesced host gather: one slice copy per contiguous extent
+        when runs are long, one fancy-index op otherwise; lands directly in
+        ``out`` when given (no intermediate page-list concatenate)."""
+        src = self._frames[dt]
+        starts, lens = frame_runs(idx)
+        if out is None:
+            out = np.empty((idx.size, self.page_elems), src.dtype)
+        if starts.size * HOST_RUN_MIN_AVG <= idx.size:
+            self._count("pool.gather_runs", int(starts.size))
+            o = 0
+            for s, l in zip(starts.tolist(), lens.tolist()):
+                out[o:o + l] = src[s:s + l]
+                o += l
+        else:
+            np.take(src, idx, axis=0, out=out)
+        return out
 
     def read_pages(self, dtype, frames) -> jax.Array:
         """Gather frames -> (n, page_elems). The local-read data plane."""
         dt = self._dt(dtype)
         idx = np.asarray(frames, np.int32)
-        return jnp.asarray(self._frames[dt][idx])
+        self._count("pool.gather_pages", int(idx.size))
+        if self.device:
+            starts, lens = frame_runs(idx)
+            if starts.size * 2 <= idx.size:
+                out = page_gather_runs(self._frames[dt], starts, lens,
+                                       backend=self.kernel_backend)
+            else:
+                out = page_gather(self._frames[dt], jnp.asarray(idx),
+                                  backend=self.kernel_backend)
+            self._drain_kernel_meters()
+            return out
+        return jnp.asarray(self._gather_host(dt, idx))
 
-    def read_pages_host(self, dtype, frames) -> np.ndarray:
+    def read_pages_host(self, dtype, frames,
+                        out: Optional[np.ndarray] = None) -> np.ndarray:
         """Gather frames -> (n, page_elems) as a HOST array (no device
         transfer).  This is what moves on the wire: the RNIC analogue DMAs
         physical frames, and the payload only becomes a device tensor at
-        assembly time (``ensure_tensor``).  Fleet-scale replays fork tens of
+        assembly time (``assemble``).  Fleet-scale replays fork tens of
         thousands of children; the paging fast path must not pay a device
-        round trip per fault."""
+        round trip per fault.  ``out`` (optionally pre-allocated by the
+        caller) receives the pages in place."""
         dt = self._dt(dtype)
         idx = np.asarray(frames, np.int32)
-        return self._frames[dt][idx]
+        if self.device:
+            data = np.asarray(self.read_pages(dtype, frames))
+            if out is not None:
+                out[...] = data
+                return out
+            return data
+        self._count("pool.gather_pages", int(idx.size))
+        return self._gather_host(dt, idx, out=out)
+
+    def assemble(self, dtype, frames, shape) -> jax.Array:
+        """Fused gather->reassemble: gather ``frames`` and land them
+        directly in the destination tensor layout (trim the final page's
+        padding, reshape) — the fault handler's tensor-assembly fast path.
+
+        Device pools run this as ONE fused launch (gather + reshape in a
+        single XLA computation / Pallas kernel + fused epilogue); host
+        pools gather run-coalesced into a flat destination buffer and hand
+        the device exactly one H2D copy — in both cases the intermediate
+        (n_pages, page_elems) hop of ``read_pages`` + ``from_pages`` is
+        gone."""
+        dt = self._dt(dtype)
+        idx = np.asarray(frames, np.int32)
+        self._count("pool.assemble_pages", int(idx.size))
+        size = int(np.prod(shape)) if len(tuple(shape)) else 1
+        if self.device:
+            out = gather_assemble(self._frames[dt], jnp.asarray(idx), shape,
+                                  out_dtype=dt, backend=self.kernel_backend)
+            self._drain_kernel_meters()
+            return out
+        flat = np.empty(idx.size * self.page_elems,
+                        self._frames[dt].dtype)
+        self._gather_host(dt, idx, out=flat.reshape(idx.size,
+                                                    self.page_elems))
+        return jnp.asarray(flat[:size].reshape(shape))
 
     def frames_array(self, dtype) -> jax.Array:
         """Expose raw physical frames (what the RNIC reads)."""
+        if self.device:
+            return self._frames[self._dt(dtype)]
         return jnp.asarray(self._frames[self._dt(dtype)])

@@ -46,13 +46,20 @@ class NodeRuntime:
                  cache_enabled: bool = False, clock=time.monotonic,
                  page_cache_cap: int = DEFAULT_PAGE_CACHE_CAP,
                  page_cache_cap_bytes: Optional[int] = None,
-                 pool_frames: int = 0):
+                 pool_frames: int = 0, device_pool: bool = False,
+                 kernel_backend: str = "auto"):
         self.node_id = node_id
         self.network = network
         # pool_frames pre-reserves physical-frame capacity (lazily zeroed),
         # so replay clusters that churn thousands of containers never pay
-        # pool-growth copies mid-run
-        self.pool = PagePool(page_elems, initial_frames=pool_frames)
+        # pool-growth copies mid-run.  device_pool=True holds frames on
+        # device and routes the pool's data plane through the
+        # page_gather/cow_scatter kernels (kernel_backend selects the impl
+        # via kernels.dispatch; the chosen impl surfaces in network.meter).
+        self.pool = PagePool(page_elems, initial_frames=pool_frames,
+                             device=device_pool,
+                             kernel_backend=kernel_backend,
+                             meter=network.meter)
         self.clock = clock
         self.instances: Dict[int, "object"] = {}
         self.seeds: Dict[int, SeedEntry] = {}
@@ -191,7 +198,11 @@ class NodeRuntime:
         live = np.asarray([(dt, int(f)) not in self._swapped
                            for f in idx.tolist()], bool)
         out = np.zeros((idx.size, self.pool.page_elems), dtype=jnp.dtype(dt))
-        if live.any():
+        if live.all() and idx.size:
+            # common case (nothing swapped): run-coalesced gather straight
+            # into the reply buffer, no intermediate copy
+            self.pool.read_pages_host(dtype, idx, out=out)
+        elif live.any():
             out[live] = self.pool.read_pages_host(dtype, idx[live])
         for i in np.nonzero(~live)[0]:
             out[i] = self._swapped[(dt, int(idx[i]))]

@@ -1,0 +1,185 @@
+"""Property matrix for the fused fault-path kernels.
+
+Two layers over the same invariant — every backend of ``page_gather`` /
+``cow_scatter`` (per-page, run-table, fused assemble/patch variants) is
+bit-identical to the ``ref.py`` oracle across dtypes, extent-run shapes,
+non-contiguous frame tables, and the empty-run / single-page edges:
+
+* hypothesis properties (skipped when hypothesis is not installed);
+* deterministic seeded mirrors of the same sweeps that always run, so the
+  matrix never silently vanishes on a box without hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cow_scatter.ops import cow_scatter, cow_scatter_runs, \
+    scatter_patch
+from repro.kernels.page_gather.ops import gather_assemble, page_gather, \
+    page_gather_runs
+from repro.kernels.page_gather.ref import expand_runs
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # tier-1 must not require hypothesis
+    HAVE_HYP = False
+
+needs_hyp = pytest.mark.skipif(not HAVE_HYP, reason="hypothesis not installed")
+
+BACKENDS = ("auto", "kernel", "interpret", "jnp", "ref")
+DTYPES = ("float32", "bfloat16", "int32")
+E = 128                      # lane-aligned page size for the kernel paths
+F = 48
+
+
+def _frames(dt: str, seed: int):
+    key = jax.random.PRNGKey(seed)
+    if dt == "int32":
+        return jax.random.randint(key, (F, E), -1000, 1000)
+    return jax.random.normal(key, (F, E), jnp.dtype(dt))
+
+
+def _runs_to_tables(runs):
+    """[(start, len)] -> (starts, lens, expanded ids); zero lens allowed."""
+    starts = np.array([s for s, _ in runs], np.int64)
+    lens = np.array([l for _, l in runs], np.int64)
+    keep = lens > 0
+    ids = expand_runs(starts[keep], lens[keep]) if keep.any() \
+        else np.zeros(0, np.int32)
+    return starts, lens, ids
+
+
+def _check_gather(dt, runs):
+    frames = _frames(dt, 11)
+    starts, lens, ids = _runs_to_tables(runs)
+    want = np.asarray(frames)[ids]
+    for backend in BACKENDS:
+        got = page_gather_runs(frames, starts, lens, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"{dt}/{backend}/{runs}")
+        got = page_gather(frames, ids, backend=backend)
+        np.testing.assert_array_equal(np.asarray(got), want,
+                                      err_msg=f"{dt}/{backend}/per-page")
+
+
+def _check_scatter(dt, runs):
+    starts, lens, ids = _runs_to_tables(runs)
+    uniq = np.unique(ids)
+    if uniq.size != ids.size:       # scatter requires non-overlapping runs
+        return
+    pages = _frames(dt, 13)[:ids.size] if ids.size <= F else None
+    if pages is None:
+        return
+    want = None
+    for backend in BACKENDS:
+        frames = _frames(dt, 17)
+        got = np.asarray(cow_scatter_runs(frames, starts, lens, pages,
+                                          backend=backend))
+        if want is None:
+            want = np.asarray(frames).copy()
+            want[ids] = np.asarray(pages)
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{dt}/{backend}/{runs}")
+
+
+# -- run-shape generators ----------------------------------------------------
+
+def _random_runs(rng, max_runs=6, max_len=5, frame_cap=F):
+    """Non-overlapping, non-adjacent runs in random order (non-contiguous
+    frame table): gaps >= 1 keep each (start, len) a maximal extent."""
+    k = int(rng.integers(0, max_runs + 1))
+    runs, cursor = [], 0
+    for _ in range(k):
+        gap = int(rng.integers(1, 4))
+        length = int(rng.integers(0, max_len + 1))    # zero-length included
+        start = cursor + gap
+        if start + max(length, 1) > frame_cap:
+            break
+        runs.append((start, length))
+        cursor = start + max(length, 1)
+    rng.shuffle(runs)
+    return runs
+
+
+# -- deterministic mirrors (always run) --------------------------------------
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_gather_matrix_seeded(dt):
+    rng = np.random.default_rng(42)
+    cases = [[], [(0, 1)], [(F - 1, 1)], [(3, 0)], [(5, 3), (20, 1), (9, 4)]]
+    cases += [_random_runs(rng) for _ in range(10)]
+    for runs in cases:
+        _check_gather(dt, runs)
+
+
+@pytest.mark.parametrize("dt", DTYPES)
+def test_scatter_matrix_seeded(dt):
+    rng = np.random.default_rng(43)
+    cases = [[], [(0, 1)], [(F - 1, 1)], [(2, 4), (12, 1), (30, 2)]]
+    cases += [_random_runs(rng) for _ in range(10)]
+    for runs in cases:
+        _check_scatter(dt, runs)
+
+
+@pytest.mark.parametrize("dt", ["float32", "bfloat16"])
+def test_assemble_patch_roundtrip_seeded(dt):
+    """gather_assemble then scatter_patch of any page subset equals
+    reassembling from the patched frames — the incremental-reassembly
+    contract ensure_tensor relies on."""
+    rng = np.random.default_rng(44)
+    for shape in [(E,), (E * 3 - 7,), (5, 77), (1,)]:
+        size = int(np.prod(shape))
+        n = -(-size // E)
+        frames = _frames(dt, 19)
+        ids = rng.choice(F, n, replace=False).astype(np.int32)
+        t = gather_assemble(frames, ids, shape, backend="ref")
+        changed = rng.choice(n, max(1, n // 2), replace=False) \
+            .astype(np.int32)
+        rows = _frames(dt, 23)[:changed.size]
+        # patch the cached tensor vs rebuild from patched frames
+        upd = np.asarray(frames).copy()
+        upd[ids[changed]] = np.asarray(rows)
+        want = gather_assemble(jnp.asarray(upd), ids, shape, backend="ref")
+        for backend in BACKENDS:
+            got = scatter_patch(t, changed, rows, page_elems=E,
+                                backend=backend)
+            np.testing.assert_array_equal(
+                np.asarray(got, np.float32), np.asarray(want, np.float32),
+                err_msg=f"{dt}/{backend}/{shape}")
+
+
+# -- hypothesis properties (skipped without hypothesis) ----------------------
+
+if HAVE_HYP:
+    SETTINGS = dict(max_examples=25, deadline=None)
+
+    @st.composite
+    def extent_runs(draw):
+        """Random non-overlapping run tables, shuffled (non-contiguous)."""
+        k = draw(st.integers(0, 6))
+        runs, cursor = [], 0
+        for _ in range(k):
+            gap = draw(st.integers(1, 3))
+            length = draw(st.integers(0, 5))
+            start = cursor + gap
+            if start + max(length, 1) > F:
+                break
+            runs.append((start, length))
+            cursor = start + max(length, 1)
+        if len(runs) > 1 and draw(st.booleans()):
+            runs = runs[::-1]
+        return runs
+
+    @needs_hyp
+    @settings(**SETTINGS)
+    @given(dt=st.sampled_from(DTYPES), runs=extent_runs())
+    def test_gather_property(dt, runs):
+        _check_gather(dt, runs)
+
+    @needs_hyp
+    @settings(**SETTINGS)
+    @given(dt=st.sampled_from(DTYPES), runs=extent_runs())
+    def test_scatter_property(dt, runs):
+        _check_scatter(dt, runs)

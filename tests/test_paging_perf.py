@@ -549,3 +549,145 @@ def test_version_bumps_on_residency_and_dirty():
     v1 = c.version
     c.mark_dirty([0])
     assert c.version > v1
+
+
+# ---------------------------------------------------------------------------
+# incremental reassembly (page_version) + the fused/device data plane
+# ---------------------------------------------------------------------------
+
+
+def test_incremental_reassembly_gathers_only_changed_pages():
+    """After a cached assembly, a 1-page COW write must patch exactly that
+    page into the cached tensor — not re-gather the whole VMA."""
+    net, nodes = _cluster()
+    params = _params(rng_seed=6)
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+    w0 = np.asarray(child.ensure_tensor("w")).copy()
+    assert child.stats["assemble_full"] >= 1
+    reads = []
+    orig = nodes[1].pool.read_pages
+    nodes[1].pool.read_pages = \
+        lambda *a, **k: (reads.append(len(np.atleast_1d(a[1]))),
+                         orig(*a, **k))[1]
+    try:
+        child.write_pages("w", [2], np.full((1, PAGE_ELEMS), 9.0, np.float32))
+        got = np.asarray(child.ensure_tensor("w"))
+        assert reads == [1], reads          # one single-page gather
+        assert child.stats["assemble_patch_pages"] == 1
+    finally:
+        nodes[1].pool.read_pages = orig
+    want = w0.copy().reshape(-1)
+    want[2 * PAGE_ELEMS:3 * PAGE_ELEMS] = 9.0
+    np.testing.assert_array_equal(got, want.reshape(w0.shape))
+
+
+def test_incremental_reassembly_random_write_sequences():
+    """Randomized ensure/COW-write interleavings stay byte-identical to a
+    plain numpy model of the tensor."""
+    rng = np.random.default_rng(12)
+    net, nodes = _cluster()
+    params = _params(rng_seed=7)
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+    vma = child.aspace["w"]
+    model = np.zeros(vma.npages * PAGE_ELEMS, np.float32)
+    model[:int(np.prod(vma.shape))] = np.asarray(params["w"]).reshape(-1)
+    for _ in range(8):
+        k = int(rng.integers(1, 4))
+        pages = rng.choice(vma.npages, size=k, replace=False)
+        data = rng.standard_normal((k, PAGE_ELEMS)).astype(np.float32)
+        child.write_pages("w", pages, data)
+        model.reshape(vma.npages, PAGE_ELEMS)[pages] = data
+        got = np.asarray(child.ensure_tensor("w")).reshape(-1)
+        np.testing.assert_array_equal(
+            got, model[:int(np.prod(vma.shape))])
+    # the sequence must have exercised the patch path, not full rebuilds
+    assert child.stats["assemble_patch_pages"] >= 8
+
+
+def test_page_version_stamps():
+    v = VMA.new_local("w", (PAGE_ELEMS * 4,), "float32",
+                      np.arange(4, dtype=np.int32))
+    c = v.child_view(1)
+    assert c.changed_since(c.version).size == 0
+    v0 = c.version
+    c.mark_resident([1, 3], [7, 8])
+    assert c.changed_since(v0).tolist() == [1, 3]
+    v1 = c.version
+    c.mark_dirty([3])
+    assert c.changed_since(v1).tolist() == [3]
+    assert c.changed_since(v0).tolist() == [1, 3]
+
+
+def _device_cluster(cache=False, n=2):
+    net = Network()
+    nodes = [NodeRuntime(f"node{i}", net, page_elems=PAGE_ELEMS,
+                         cache_enabled=cache, device_pool=True)
+             for i in range(n)]
+    return net, nodes
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+def test_device_pool_fork_parity_and_kernel_meters():
+    """A cluster whose pools hold frames on device (data plane routed
+    through the page_gather/cow_scatter kernels) forks byte-identically to
+    the host-pool reference, and the chosen kernel impl surfaces in the
+    network meter."""
+    params = _params(rng_seed=9)
+    ref = _reference_child(params)
+    net, nodes = _device_cluster()
+    parent = ModelInstance.create(nodes[0], "t", params)
+    child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+    for name in child.leaf_names:
+        child.touch_pages(name, np.arange(child.aspace[name].npages))
+    got = child.materialize_pytree()
+    for k in params:
+        np.testing.assert_array_equal(np.asarray(got[k]), np.asarray(ref[k]),
+                                      err_msg=k)
+    kernel_keys = [k for k in net.meter if k.startswith("kernel.")]
+    assert any(k.startswith("kernel.page_gather.") for k in kernel_keys), \
+        dict(net.meter)
+    assert any(k.startswith("kernel.cow_scatter.") for k in kernel_keys), \
+        dict(net.meter)
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+def test_fusion_never_changes_wire_traffic():
+    """The fused data plane (device pools + kernels) must move EXACTLY the
+    bytes/ops/sges of the host path at equal touches: fusion changes how
+    fast pages are assembled, never what is transferred."""
+    params = _params(rng_seed=10)
+    meters = {}
+    for flavor, mk in (("host", _cluster), ("device", _device_cluster)):
+        net, nodes = mk()
+        parent = ModelInstance.create(nodes[0], "t", params)
+        child = nodes[0].prepare_fork(parent).resume_on(nodes[1])
+        rng = np.random.default_rng(3)
+        for name in child.leaf_names:
+            npages = child.aspace[name].npages
+            child.touch_pages(name, rng.choice(npages, npages // 2 + 1,
+                                               replace=False))
+        child.write_pages("w", [0, 1],
+                          np.zeros((2, PAGE_ELEMS), np.float32))
+        child.materialize_pytree()
+        meters[flavor] = net.meter
+    for key in ("dct.bytes", "dct.ops", "dct.sges", "page_pages_moved"):
+        assert meters["host"][key] == meters["device"][key], (
+            key, meters["host"][key], meters["device"][key])
+
+
+def test_pool_out_param_and_counters():
+    pool = PagePool(page_elems=64, initial_frames=16)
+    from collections import Counter
+    pool.meter = Counter()
+    pool._ensure_capacity("float32", 16)
+    data = np.arange(16 * 64, dtype=np.float32).reshape(16, 64)
+    pool.write_pages("float32", np.arange(16), data)
+    out = np.empty((8, 64), np.float32)
+    got = pool.read_pages_host("float32", np.arange(4, 12), out=out)
+    assert got is out
+    np.testing.assert_array_equal(out, data[4:12])
+    assert pool.meter["pool.gather_pages"] == 8
+    # contiguous 8-page gather runs as ONE slice copy
+    assert pool.meter["pool.gather_runs"] == 1
