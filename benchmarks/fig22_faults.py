@@ -25,7 +25,9 @@ a handler that pages everything at t0 can never be caught mid-read.
 
 Gates (``--smoke``): the zero row is digest-identical to baseline; every
 faulted row completes >= 99% of invocations; the targeted rows move
-recovery bytes; a repeated storm replay is byte-identical; and no row
+recovery bytes; a repeated storm replay is byte-identical; the storm row
+replayed under SimSan (``repro.analysis``: every runtime invariant check
+armed) raises nothing and reproduces the same summary; and no row
 exceeds the wall budget.  ``run(write_json=...)`` pins the summary into
 ``BENCH_faults.json`` (merge-written, see benchmarks/common.py).
 """
@@ -115,11 +117,13 @@ def _plans(duration_s: float):
 
 
 def replay_once(plan, scale: int = SCALE, n_nodes: int = N_NODES,
-                seed: int = SEED):
-    """One fault-plane replay -> (deterministic summary, wall seconds)."""
+                seed: int = SEED, sanitize=None):
+    """One fault-plane replay -> (deterministic summary, wall seconds).
+    ``sanitize=True`` runs the cluster under SimSan (repro.analysis) —
+    the sanitizer only reads, so the summary must be byte-identical."""
     trace = spike_660323(scale=scale)
     net, nodes = build_cluster(n_nodes, model=NetModel(node_links=N_LINKS),
-                               page_elems=PAGE_ELEMS)
+                               page_elems=PAGE_ELEMS, sanitize=sanitize)
     eng = ReplayEngine(trace, ForkOnDemand(replicas=REPLICAS, prefetch=0),
                        [_function()], network=net, nodes=nodes, seed=seed,
                        reroute_backlog=0.05, faults=plan)
@@ -162,6 +166,13 @@ def run_sweeps(write_json=None, scale: int = SCALE, n_nodes: int = N_NODES,
     # determinism witness: the storm plan replayed twice must match exactly
     d2, _ = replay_once(plans["storm"], scale=scale, n_nodes=n_nodes,
                         seed=seed)
+    # SimSan witness: the storm row replayed with every runtime invariant
+    # check armed (lane/channel monotonicity, meter and payload
+    # conservation, conn-pool consistency, lease edges) must raise nothing
+    # AND reproduce the exact summary — the sanitizer observes, it never
+    # perturbs the clock or the meters
+    dsan, _ = replay_once(plans["storm"], scale=scale, n_nodes=n_nodes,
+                          seed=seed, sanitize=True)
     faulted = [l for l in plans if plans[l] is not None
                and not plans[l].empty()]
     targeted_bytes = sum(
@@ -182,6 +193,7 @@ def run_sweeps(write_json=None, scale: int = SCALE, n_nodes: int = N_NODES,
         "recovery_bytes_targeted": targeted_bytes,
         "recovery_gate": targeted_bytes > 0,
         "deterministic": d2 == reps["storm"],
+        "simsan_storm_identical": dsan == reps["storm"],
         "event_log_digest": {l: reps[l]["event_log_digest"] for l in plans},
         "lease": {l: reps[l]["lease"] for l in ("crash", "crash_sweep")},
     }
@@ -218,11 +230,13 @@ def main() -> int:
         slow = {l: round(w, 1) for l, w in walls.items()
                 if w > ROW_WALL_BUDGET_S}
         ok = (s["zero_plan_identical"] and s["completion_gate"]
-              and s["recovery_gate"] and s["deterministic"] and not slow)
+              and s["recovery_gate"] and s["deterministic"]
+              and s["simsan_storm_identical"] and not slow)
         print(f"smoke: zero_plan_identical={s['zero_plan_identical']} "
               f"completion={s['completion']} (gate>=99%) "
               f"recovery_bytes={s['recovery_bytes_targeted']} (gate>0) "
               f"deterministic={s['deterministic']} "
+              f"simsan_storm_identical={s['simsan_storm_identical']} "
               f"over_budget={slow or None} "
               f"-> {'OK' if ok else 'FAIL'}")
         return 0 if ok else 1

@@ -1,0 +1,19 @@
+"""repro.analysis — correctness tooling for the replay stack.
+
+Three parts (see ``docs/analysis.md``):
+
+* :mod:`repro.analysis.lint` — the stdlib-``ast`` determinism linter
+  (``python -m repro.analysis.lint src/repro``);
+* :mod:`repro.analysis.simsan` — SimSan, the opt-in runtime invariant
+  sanitizer (``REPRO_SIMSAN=1`` / ``Network(sanitize=True)``);
+* :mod:`repro.analysis.races` — the sim-time race detector
+  (``python -m repro.analysis.races --smoke``).
+
+Only the sanitizer surface is re-exported here: ``repro.net.network``
+imports it at module load, so this ``__init__`` must stay free of any
+import that reaches back into ``repro.net`` / ``repro.sim`` (``lint``
+and ``races`` are imported as submodules on demand).
+"""
+from repro.analysis.simsan import Sanitizer, SanitizerError, enabled
+
+__all__ = ["Sanitizer", "SanitizerError", "enabled"]

@@ -354,6 +354,13 @@ class ModelInstance:
         OWNS (recorded for free-time invalidation) and mark ``pages``
         resident there.  The single ownership-bookkeeping site for every
         materialization path (transport fetch, cache hit, fallback, COW)."""
+        san = self.node.network.sanitizer
+        if san is not None:
+            san.adopt_payload(
+                data, rows=len(pages),
+                row_bytes=self.node.pool.page_elems
+                * np.dtype(vma.dtype).itemsize,
+                op=f"adopt {vma.name}@{self.node.node_id}")
         local = self.node.pool.alloc(vma.dtype, len(pages))
         self.node.pool.write_pages(vma.dtype, local, data)
         self._owned_frames.setdefault(vma.dtype, []).extend(local.tolist())

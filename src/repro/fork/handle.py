@@ -88,6 +88,8 @@ class ForkHandle:
             return now
         if self.runtime is not None:
             return self.runtime.clock()
+        # sim-ok: wall-clock -- only unbound (deserialized) handles outside a
+        # sim reach this; bound handles read the parent's clock above
         return time.monotonic()
 
     def remaining(self, now: Optional[float] = None) -> float:

@@ -25,6 +25,7 @@ network.Network` and is the single place connection state changes:
 """
 from __future__ import annotations
 
+import contextlib
 from collections import OrderedDict
 from typing import Dict, Optional, Set
 
@@ -165,12 +166,22 @@ class ConnManager:
 
     def _admit(self, conn: Connection) -> None:
         self.conns[conn.key] = conn
+        # slot the connection everywhere BEFORE enforcing caps: eviction
+        # scans the whole control plane, so it must never observe a conn
+        # half-inserted (cap victims only depend on each pool's own LRU
+        # order, so splitting the loop changes nothing behaviorally)
         for nid in conn.nodes:
-            pool = self.pool(nid)
-            pool.insert(conn)
-            pool.enforce_cap(protect=conn.key)
+            self.pool(nid).insert(conn)
+        for nid in conn.nodes:
+            self.pools[nid].enforce_cap(protect=conn.key)
+        san = self.net.sanitizer
+        if san is not None:
+            san.check_conns(self, f"admit {conn.key}")
 
     def _touch(self, conn: Connection, user: Optional[str]) -> None:
+        san = self.net.sanitizer
+        if san is not None:
+            san.touch_live(conn, self, f"touch {conn.key}")
         for nid in conn.nodes:
             pool = self.pools.get(nid)
             if pool is not None:
@@ -190,18 +201,21 @@ class ConnManager:
             pool = self.pools.get(nid)
             if pool is not None:
                 pool.remove(conn.key)
+        # sim-ok: set-iter -- pure per-user discards; order cannot matter
         for u in conn.users:
             keys = self._user_index.get(u)
             if keys is not None:
                 keys.discard(conn.key)
         conn.users.clear()
         if isinstance(conn, DCTInitiator):
+            # sim-ok: set-iter -- independent handshake invalidations
             for d in conn.peers:
                 tgt = self.conns.get((conn.backend, "tgt", d))
                 if tgt is not None:
                     tgt.initiators.discard(conn.src)
             conn.peers.clear()
         elif isinstance(conn, DCTTarget):
+            # sim-ok: set-iter -- independent handshake invalidations
             for s in conn.initiators:
                 dci = self.conns.get((conn.backend, "dci", s))
                 if dci is not None:
@@ -209,6 +223,9 @@ class ConnManager:
             conn.initiators.clear()
         if meter:
             self.net.meter[f"{conn.backend}.conn_evicted"] += 1
+        san = self.net.sanitizer
+        if san is not None:
+            san.check_conns(self, f"evict {conn.key}")
 
     def release_user(self, user: str) -> None:
         """Drop every reference ``user`` holds (instance free): the
@@ -218,6 +235,9 @@ class ConnManager:
             conn = self.conns.get(key)
             if conn is not None:
                 conn.users.discard(user)
+        san = self.net.sanitizer
+        if san is not None:
+            san.check_conns(self, f"release_user {user}")
 
     def fault_pair(self, name: str, src: str, dst: str) -> None:
         """An op on the (src, dst) QP over backend ``name`` timed out: RC
@@ -237,8 +257,15 @@ class ConnManager:
         pool = self.pools.pop(node_id, None)
         if pool is None:
             return
-        for conn in pool.connections():
-            self.evict(conn)
+        san = self.net.sanitizer
+        # the cascade is inconsistent by construction (the pool is gone
+        # while its conns still exist), so scan once at the end instead
+        # of after each evict
+        with (san.bulk() if san is not None else contextlib.nullcontext()):
+            for conn in pool.connections():
+                self.evict(conn)
+        if san is not None:
+            san.check_conns(self, f"drop_node {node_id}")
 
     def reset(self) -> None:
         """Forget ALL connection state (tests/diagnostics): pairs re-pay

@@ -19,6 +19,7 @@ from __future__ import annotations
 from collections import Counter
 from typing import Dict, Optional
 
+from repro.analysis import simsan
 from repro.net import backends as _backends   # noqa: F401  (registers built-ins)
 from repro.net.conn import ConnManager
 from repro.net.errors import AccessRevoked, NodeDown
@@ -27,7 +28,8 @@ from repro.net.transport import Transport, resolve_transport, transport_names
 
 
 class Network:
-    def __init__(self, model: Optional[NetModel] = None, transport: str = "dct"):
+    def __init__(self, model: Optional[NetModel] = None, transport: str = "dct",
+                 sanitize: Optional[bool] = None):
         resolve_transport(transport)        # unknown name -> ValueError
         self.model = model or NetModel()
         self.transport = transport          # default backend name
@@ -64,6 +66,15 @@ class Network:
         # transports skip every fault check and charge identically to a
         # pre-fault-plane build (digest-stable by construction)
         self.faults = None
+        # SimSan: the opt-in runtime invariant sanitizer (lane/channel
+        # monotonicity, meter conservation, conn-pool consistency, lease
+        # edges).  None by default — every hook in the data plane sits
+        # behind a None guard, mirroring the fault plane's pattern — and a
+        # sanitized run of a correct build is digest-identical because the
+        # sanitizer only reads.  ``sanitize=None`` defers to REPRO_SIMSAN.
+        if sanitize is None:
+            sanitize = simsan.enabled()
+        self.sanitizer = simsan.Sanitizer(self) if sanitize else None
 
     # -- transport registry ----------------------------------------------------
 
@@ -80,6 +91,10 @@ class Network:
 
     def register(self, node) -> None:
         self.nodes[node.node_id] = node
+        if self.sanitizer is not None:
+            # a (re-)registered node is a fresh incarnation for the
+            # exactly-once parent_lost accounting
+            self.sanitizer.node_registered(node.node_id)
 
     def unregister(self, node_id: str) -> None:
         self.nodes.pop(node_id, None)
@@ -311,6 +326,8 @@ class Network:
 
     def reset_meter(self) -> None:
         self.meter.clear()
+        if self.sanitizer is not None:
+            self.sanitizer.reset_meters()   # the shadow ledger follows
         self.sim_time = 0.0
         self._channel_busy.clear()   # busy stamps are absolute on the clock
         self._link_busy.clear()

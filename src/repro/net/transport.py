@@ -201,6 +201,10 @@ class Transport(abc.ABC):
             return
         net = self.net
         meter = net.meter
+        san = net.sanitizer
+        # SimSan: faulted attempts hold lanes but move ZERO payload bytes
+        bytes_before = meter.get(f"{self.name}.bytes", 0) \
+            if san is not None else 0
         attempt = 0
         while inj.op_fault(self.name, op, src, dst):
             attempt += 1
@@ -211,12 +215,21 @@ class Transport(abc.ABC):
                 start = max(net.sim_time, net.link_free(src),
                             net.link_free(dst))
                 end = start + timeout
+                if san is not None:
+                    opdesc = f"{self.name} {op} timeout {src}->{dst}"
+                    san.link_hold(src, start, end, opdesc)
+                    if dst != src:
+                        san.link_hold(dst, start, end, opdesc)
                 net.occupy_link(src, end)
                 if dst != src:
                     net.occupy_link(dst, end)
                 net.sim_time = end
             if self.conn_kind == "peer":
                 net.conns.fault_pair(self.name, src, dst)
+            if san is not None:
+                san.retry_conserved(
+                    self.name, bytes_before,
+                    f"{self.name} {op} retry {src}->{dst}")
             if attempt > self.max_retries:
                 raise RetriesExhausted(
                     f"{self.name} {op} {src}->{dst}: "
@@ -265,6 +278,12 @@ class Transport(abc.ABC):
         self.net.meter["page_pages_moved"] += int(np.asarray(frames).size)
         self._charge("read", src, dst, nbytes, seconds,
                      ops=ops, sges=sges, async_read=async_read, setup=setup)
+        san = self.net.sanitizer
+        if san is not None:
+            # the wire payload must reach PagePool.write_pages whole —
+            # the adopter (ModelInstance._adopt_pages) closes this tag
+            san.tag_payload(pages, self.name, rows=int(pages.shape[0]),
+                            nbytes=nbytes)
         return pages
 
     def read_blob(self, src: str, dst: str, nbytes: int, dc_key: int,
@@ -329,6 +348,12 @@ class Transport(abc.ABC):
             return owed
         start = max(net.sim_time, net.link_free(src), net.link_free(dst))
         end = start + owed
+        san = net.sanitizer
+        if san is not None:
+            opdesc = f"{self.name} setup {src}->{dst}"
+            san.link_hold(src, start, end, opdesc)
+            if dst != src:
+                san.link_hold(dst, start, end, opdesc)
         net.occupy_link(src, end)
         if dst != src:
             net.occupy_link(dst, end)
@@ -366,6 +391,14 @@ class Transport(abc.ABC):
         start = max(net.sim_time, net.channel_busy(src, dst),
                     net.link_free(src), net.link_free(dst))
         end = start + setup + seconds
+        san = net.sanitizer
+        if san is not None:
+            opdesc = f"{self.name} {kind} {src}->{dst}"
+            san.channel_hold(src, dst, start, end, opdesc)
+            san.link_hold(src, start, end, opdesc)
+            if dst != src:
+                san.link_hold(dst, start, end, opdesc)
+            san.charged(self.name, nbytes, opdesc)
         if setup > 0:
             # deferred establishment rides the channel ahead of the
             # payload: stamp it on both endpoints' conn-backlog clocks so

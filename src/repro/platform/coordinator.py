@@ -66,7 +66,9 @@ def _seed_handles(seed: Seed) -> List[ForkHandle]:
 
 
 class Coordinator:
-    def __init__(self, network, nodes: List[NodeRuntime], clock=time.monotonic,
+    def __init__(self, network, nodes: List[NodeRuntime],
+                 clock=time.monotonic,  # sim-ok: wall-clock -- host default; replays pass SimClock
+
                  scheduler=None, seed_replicas: int = 1,
                  seed_placement: Optional[PlacementPolicy] = None,
                  reroute_backlog: Optional[float] = None,
@@ -106,6 +108,10 @@ class Coordinator:
 
     def _count_lost(self, func: str, lost: List[str]) -> None:
         if lost:
+            san = self.network.sanitizer
+            if san is not None:
+                for nid in lost:
+                    san.parent_lost(func, nid)
             self._lease_event(func, "parent_lost", len(lost))
 
     # -- registry ---------------------------------------------------------
@@ -378,6 +384,9 @@ class Coordinator:
                 del self.seed_store[func]
                 return None
         elif seed.parent_node not in self.network.nodes:
+            san = self.network.sanitizer
+            if san is not None:
+                san.parent_lost(func, seed.parent_node)
             del self.seed_store[func]
             self._lease_event(func, "parent_lost")
             return None

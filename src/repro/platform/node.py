@@ -43,7 +43,9 @@ class SeedEntry:
 
 class NodeRuntime:
     def __init__(self, node_id: str, network, page_elems: int = PAGE_ELEMS,
-                 cache_enabled: bool = False, clock=time.monotonic,
+                 cache_enabled: bool = False,
+                 clock=time.monotonic,  # sim-ok: wall-clock -- host default; replays pass SimClock
+
                  page_cache_cap: int = DEFAULT_PAGE_CACHE_CAP,
                  page_cache_cap_bytes: Optional[int] = None,
                  pool_frames: int = 0, device_pool: bool = False,
@@ -106,6 +108,9 @@ class NodeRuntime:
         return _prepare(self, instance, lease=lease)
 
     def register_seed(self, handler_id: int, entry: SeedEntry) -> None:
+        san = self.network.sanitizer
+        if san is not None:
+            san.lease_register(self.node_id, handler_id)
         self.seeds[handler_id] = entry
 
     def auth_seed(self, handler_id: int, auth_key: int,
@@ -144,6 +149,9 @@ class NodeRuntime:
         e.created = now
         e.lease_deadline = math.inf if duration is None else now + duration
         self.lease_stats["renewals"] += 1
+        san = self.network.sanitizer
+        if san is not None:
+            san.lease_renew(self.node_id, handler_id)
         return e.lease_deadline
 
     def revoke_seed(self, handler_id: int) -> int:
@@ -158,6 +166,9 @@ class NodeRuntime:
         self.network.destroy_dc_target(self.node_id, e.desc_key)
         e.desc_key = self.take_dc_target()
         self.lease_stats["revocations"] += 1
+        san = self.network.sanitizer
+        if san is not None:
+            san.lease_revoke(self.node_id, handler_id)
         return e.generation
 
     def reclaim_seed(self, handler_id: int,
@@ -167,6 +178,9 @@ class NodeRuntime:
         entry = self.seeds.pop(handler_id, None)
         if entry is None:
             return
+        san = self.network.sanitizer
+        if san is not None:
+            san.lease_reclaim(self.node_id, handler_id)
         for key in entry.keys.values():
             self.network.destroy_dc_target(self.node_id, key)
         self.network.destroy_dc_target(self.node_id, entry.desc_key)
@@ -369,6 +383,8 @@ class NodeRuntime:
             return
         self.alive = False
         net = self.network
+        if net.sanitizer is not None:
+            net.sanitizer.node_crashed(self.node_id)
         for inst in list(self.instances.values()):
             net.conn_release_user(inst._conn_user)
             if inst.prefetch_engine is not None:
@@ -394,4 +410,6 @@ class NodeRuntime:
 
 
 def make_auth_key() -> int:
+    # sim-ok: unseeded-random -- auth keys are opaque capabilities compared
+    # only for equality; they never reach the event log, meters or digests
     return secrets.randbits(62)

@@ -177,13 +177,16 @@ class ReplayResult:
 def build_cluster(n_nodes: int, transport: str = "dct",
                   page_elems: int = SIM_PAGE_ELEMS,
                   model: Optional[NetModel] = None,
-                  pool_frames: int = 4096):
+                  pool_frames: int = 4096,
+                  sanitize: Optional[bool] = None):
     """(network, nodes) wired to the sim clock: every node's lease clock
     reads ``net.sim_time``, so renewals and expiries happen in replayed
     seconds.  Construction is O(n): channel and link-lane state is lazy
     per pair/node, and each node pre-reserves ``pool_frames`` of lazily
-    zeroed frame capacity so container churn never pays growth copies."""
-    net = Network(model=model, transport=transport)
+    zeroed frame capacity so container churn never pays growth copies.
+    ``sanitize=True`` runs the cluster under SimSan (None defers to the
+    ``REPRO_SIMSAN`` environment switch, see repro.analysis.simsan)."""
+    net = Network(model=model, transport=transport, sanitize=sanitize)
     clock = SimClock(net)
     nodes = [NodeRuntime(f"n{i}", net, page_elems=page_elems, clock=clock,
                          pool_frames=pool_frames)
@@ -203,7 +206,8 @@ class ReplayEngine:
                  scheduler=None, reroute_backlog: Optional[float] = None,
                  gc_every: float = 30.0, sample_every: float = 30.0,
                  drain_margin: float = 120.0, keep_node_timelines: bool = False,
-                 faults: Optional[FaultPlan] = None):
+                 faults: Optional[FaultPlan] = None,
+                 tiebreak_seed: Optional[int] = None):
         self.trace = trace
         self.policy = policy
         self.seed = seed
@@ -212,7 +216,10 @@ class ReplayEngine:
                                            page_elems=page_elems)
         self.net = network
         self.nodes = nodes
-        self.loop = EventLoop(network, seed=seed)
+        # tiebreak_seed is the race detector's knob (repro.analysis.races):
+        # it shuffles same-(time, priority) dispatch order and must leave
+        # every digest untouched on a race-free engine
+        self.loop = EventLoop(network, seed=seed, tiebreak_seed=tiebreak_seed)
         self.coord = Coordinator(
             network, nodes, clock=SimClock(network),
             scheduler=scheduler or RoundRobinScheduler(),
@@ -366,10 +373,16 @@ class ReplayEngine:
             self.loop.at(inv.t, self._on_arrival, inv,
                          label=f"arrive:{inv.func}")
         horizon = self.trace.duration_s + self.drain_margin
+        # same-time ordering is declared, not incidental: invocation-facing
+        # events (arrivals/completions/crashes) run first at a shared
+        # timestamp, then GC sweeps, then timeline sampling — the order the
+        # old schedule-sequence tiebreak happened to produce, now pinned by
+        # priority so the tiebreak shuffle cannot flip gc/sample collisions
+        # (every 60 s both fire at the same instant)
         self.loop.every(self.gc_every, self._gc_tick, until=horizon,
-                        label="gc")
+                        label="gc", priority=10)
         self.loop.every(self.sample_every, self._sample, until=horizon,
-                        start=0.0, label="sample")
+                        start=0.0, label="sample", priority=20)
         self.loop.run()
         def rollup(per_func: Dict[str, List[float]]) -> Dict[str, Dict[str, int]]:
             rows, flat = {}, []

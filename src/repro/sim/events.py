@@ -23,11 +23,23 @@ after it returns.
 
 Determinism
 -----------
-Ties in the heap break on schedule order (a monotone sequence number), the
+Ties in the heap break on a declared ``priority`` first (lower runs
+earlier) and then on schedule order (a monotone sequence number), the
 only randomness is the loop's own ``random.Random(seed)`` (arrival jitter),
 and the loop keeps a structured event log — ``(time, label)`` per dispatch
 — whose canonical digest is byte-identical across runs of the same trace
 and seed (``tests/test_sim_engine.py`` pins this).
+
+Priorities exist so that same-time ordering is *intent*, not an accident
+of scheduling order: the replay engine runs arrivals/completions/crashes
+at priority 0, GC sweeps at 10 and timeline sampling at 20 — exactly the
+order the sequence numbers happened to produce before, so pinned digests
+are unchanged.  What priorities leave untied is by definition
+order-independent, and ``tiebreak_seed`` makes that claim testable: a
+non-None seed shuffles dispatch order *within* each (time, priority)
+class, and the race detector (``repro.analysis.races``) diffs the
+resulting digests to find handlers that secretly depended on incidental
+ordering.
 """
 from __future__ import annotations
 
@@ -59,34 +71,47 @@ class SimClock:
 class EventLoop:
     """Single-heap discrete-event scheduler, synchronized with a Network."""
 
-    def __init__(self, network=None, seed: int = 0):
+    def __init__(self, network=None, seed: int = 0,
+                 tiebreak_seed: Optional[int] = None):
         self.network = network
         self.rng = random.Random(seed)
         self.seed = seed
         self.now = 0.0
-        self._heap: List[Tuple[float, int, str, Callable, tuple]] = []
+        self._heap: List[tuple] = []
         self._seq = itertools.count()
         self.events_run = 0
         self.log: List[Tuple[float, str]] = []
+        # race-detector mode: shuffle dispatch order WITHIN each
+        # (time, priority) tie class.  None (the default) keeps the
+        # monotone schedule-order tiebreak, bit-identical to before.
+        self.tiebreak_seed = tiebreak_seed
+        self._tiebreak_rng = (None if tiebreak_seed is None
+                              else random.Random(tiebreak_seed))
 
     # -- scheduling ----------------------------------------------------------
 
-    def at(self, when: float, fn: Callable, *args, label: Optional[str] = None):
-        """Schedule ``fn(*args)`` at absolute sim time ``when``."""
+    def at(self, when: float, fn: Callable, *args,
+           label: Optional[str] = None, priority: int = 0):
+        """Schedule ``fn(*args)`` at absolute sim time ``when``.  Same-time
+        events dispatch in ``priority`` order (lower first), then schedule
+        order — declare ordering intent with ``priority`` instead of
+        leaning on scheduling sequence."""
         if when < 0:
             raise ValueError(f"cannot schedule at negative sim time {when}")
+        tie = (0.0 if self._tiebreak_rng is None
+               else self._tiebreak_rng.random())
         heapq.heappush(self._heap,
-                       (when, next(self._seq),
+                       (when, priority, tie, next(self._seq),
                         label or getattr(fn, "__name__", "event"), fn, args))
 
     def after(self, delay: float, fn: Callable, *args,
-              label: Optional[str] = None):
+              label: Optional[str] = None, priority: int = 0):
         """Schedule ``fn(*args)`` ``delay`` seconds after the current event."""
-        self.at(self.now + delay, fn, *args, label=label)
+        self.at(self.now + delay, fn, *args, label=label, priority=priority)
 
     def every(self, interval: float, fn: Callable, *,
               until: float, start: Optional[float] = None,
-              label: Optional[str] = None):
+              label: Optional[str] = None, priority: int = 0):
         """Recurring event at ``start, start+interval, ...`` up to ``until``
         inclusive — bounded so periodic housekeeping (GC sweeps, timeline
         sampling) cannot keep an otherwise-drained replay alive forever."""
@@ -98,11 +123,11 @@ class EventLoop:
             fn()
             nxt = when + interval
             if nxt <= until:
-                self.at(nxt, fire, nxt, label=lbl)
+                self.at(nxt, fire, nxt, label=lbl, priority=priority)
 
         first = interval if start is None else start
         if first <= until:
-            self.at(first, fire, first, label=lbl)
+            self.at(first, fire, first, label=lbl, priority=priority)
 
     # -- dispatch ------------------------------------------------------------
 
@@ -112,7 +137,7 @@ class EventLoop:
         of events dispatched by this call."""
         ran = 0
         while self._heap and (until is None or self._heap[0][0] <= until):
-            when, _seq, label, fn, args = heapq.heappop(self._heap)
+            when, _prio, _tie, _seq, label, fn, args = heapq.heappop(self._heap)
             self.now = when
             if self.network is not None:
                 # the handler's local time — see the module docstring for

@@ -1,0 +1,483 @@
+"""repro.analysis: determinism linter, SimSan sanitizer, race detector."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.analysis import Sanitizer, SanitizerError, enabled, simsan
+from repro.analysis.lint import (Finding, collect_set_attrs, is_sim_critical,
+                                 lint_paths, lint_source)
+from repro.analysis.lint import main as lint_main
+from repro.analysis.races import (compare_runs, detect, first_log_divergence,
+                                  semantic_summary)
+from repro.net.network import Network
+from repro.sim import ForkOnDemand, ReplayEngine, SimFunction, spike_660323
+from repro.sim.engine import build_cluster
+from repro.sim.events import EventLoop
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def findings(src, **kw):
+    return [f for f in lint_source(src, **kw) if not f.suppressed]
+
+
+def rules(src, **kw):
+    return [f.rule for f in findings(src, **kw)]
+
+
+# ---------------------------------------------------------------------------
+# linter: one positive + one suppressed case per rule
+# ---------------------------------------------------------------------------
+
+def test_lint_wall_clock_call_and_reference():
+    assert rules("import time\nt = time.monotonic()\n") == ["wall-clock"]
+    # stored as a default (never called here) is still a finding
+    assert rules("import time\ndef f(clock=time.monotonic): pass\n") \
+        == ["wall-clock"]
+    assert rules("from time import perf_counter\nx = perf_counter()\n") \
+        == ["wall-clock"]
+
+
+def test_lint_wall_clock_suppressed_inline_and_above():
+    src = ("import time\n"
+           "t = time.monotonic()  # sim-ok: wall-clock -- host only\n")
+    all_f = lint_source(src)
+    assert [f.suppressed for f in all_f] == [True]
+    src = ("import time\n"
+           "# sim-ok: wall-clock -- reason spanning\n"
+           "# a second comment line\n"
+           "t = time.monotonic()\n")
+    assert findings(src) == []
+    # a trailing comment must NOT bleed onto the next statement
+    src = ("import time\n"
+           "a = 1  # sim-ok: wall-clock\n"
+           "t = time.monotonic()\n")
+    assert rules(src) == ["wall-clock"]
+
+
+def test_lint_datetime_now():
+    src = "import datetime\nts = datetime.datetime.now()\n"
+    assert rules(src) == ["wall-clock"]
+    # explicit tz argument is allowed (still wall clock, but the rule
+    # targets the argless idiom that litters timestamps)
+    src = "import datetime\nts = datetime.datetime.now(tz)\n"
+    assert rules(src) == []
+
+
+def test_lint_unseeded_random():
+    assert rules("import random\nx = random.random()\n") \
+        == ["unseeded-random"]
+    assert rules("import random\nx = random.Random()\n") \
+        == ["unseeded-random"]
+    assert rules("import random\nx = random.Random(7)\n") == []
+    assert rules("import numpy as np\nx = np.random.rand(3)\n") \
+        == ["unseeded-random"]
+    assert rules("import numpy as np\nr = np.random.default_rng(0)\n") == []
+    assert rules("import secrets\nk = secrets.token_bytes(8)\n") \
+        == ["unseeded-random"]
+    assert rules("import random\nx = random.SystemRandom()\n") \
+        == ["unseeded-random"]
+
+
+def test_lint_set_iter():
+    assert rules("for x in {1, 2}:\n    pass\n") == ["set-iter"]
+    assert rules("s = set()\nfor x in s:\n    pass\n") == ["set-iter"]
+    assert rules("s = {1}\nys = [x for x in s]\n") == ["set-iter"]
+    assert rules("s = set()\nfor x in sorted(s):\n    pass\n") == []
+    # set-typed attribute known from a cross-file annotation
+    src = "for u in conn.users:\n    pass\n"
+    assert rules(src) == []
+    assert rules(src, extra_set_attrs={"users"}) == ["set-iter"]
+
+
+def test_lint_cross_file_set_attrs():
+    types_src = ("class C:\n"
+                 "    def __init__(self):\n"
+                 "        self.users: Set[str] = set()\n")
+    attrs = collect_set_attrs([("types.py", types_src)])
+    assert "users" in attrs
+    assert rules("for u in c.users:\n    pass\n", extra_set_attrs=attrs) \
+        == ["set-iter"]
+
+
+def test_lint_float_sum():
+    assert rules("s = {1.0}\nt = sum(s)\n") == ["float-sum"]
+    # a genexp over a set is BOTH an unordered reduction and a set
+    # iteration — the two rules are suppressed independently
+    assert rules("s = {1.0}\nt = sum(x * 2 for x in s)\n") \
+        == ["float-sum", "set-iter"]
+    assert rules("t = sum([1.0, 2.0])\n") == []
+
+
+def test_lint_dict_iter_is_strict_only():
+    src = "d = {}\nfor k, v in d.items():\n    pass\n"
+    assert rules(src) == []
+    assert rules(src, strict=True) == ["dict-iter"]
+
+
+def test_lint_finding_shape():
+    f = findings("import time\nt = time.monotonic()\n")[0]
+    assert isinstance(f, Finding)
+    assert (f.line, f.rule) == (2, "wall-clock")
+    assert f.to_dict()["rule"] == "wall-clock"
+    assert "wall-clock" in f.format()
+
+
+def test_lint_sim_critical_scoping():
+    assert is_sim_critical(REPO / "src/repro/net/transport.py")
+    assert is_sim_critical(REPO / "src/repro/sim/events.py")
+    assert not is_sim_critical(REPO / "src/repro/core/instance.py")
+    assert not is_sim_critical(REPO / "benchmarks/fig20_spikes.py")
+
+
+def test_lint_repo_tree_is_clean():
+    """The gating check CI runs: zero active findings over src/repro."""
+    found, checked = lint_paths([str(REPO / "src/repro")])
+    active = [f for f in found if not f.suppressed]
+    assert active == [], "\n".join(f.format() for f in active)
+    assert checked > 10
+    # the waivers written for this PR are present and inventoried
+    assert sum(1 for f in found if f.suppressed) >= 5
+
+
+def test_lint_cli_json(tmp_path, capsys):
+    bad = tmp_path / "repro" / "sim" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\nt = time.monotonic()\n")
+    rc = lint_main(["--json", str(bad)])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["active"] == 1
+    assert out["findings"][0]["rule"] == "wall-clock"
+    bad.write_text("x = 1\n")
+    assert lint_main([str(bad)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# SimSan: enablement + typed violations at every hook family
+# ---------------------------------------------------------------------------
+
+def sanitized_net():
+    net, nodes = build_cluster(2, page_elems=128, sanitize=True)
+    return net, nodes
+
+
+def test_simsan_env_switch(monkeypatch):
+    monkeypatch.delenv(simsan._ENV, raising=False)
+    assert not enabled()
+    assert Network(sanitize=None).sanitizer is None
+    monkeypatch.setenv(simsan._ENV, "1")
+    assert enabled()
+    assert Network(sanitize=None).sanitizer is not None
+    # explicit False beats the environment
+    assert Network(sanitize=False).sanitizer is None
+
+
+def test_simsan_error_carries_context():
+    err = SanitizerError("meter-drift", "dct read n0->n1", meter_bytes=4,
+                         expected=8)
+    assert isinstance(err, AssertionError)
+    assert err.check == "meter-drift"
+    assert err.op == "dct read n0->n1"
+    assert err.context == {"meter_bytes": 4, "expected": 8}
+    assert "[simsan:meter-drift]" in str(err)
+    assert "expected=8" in str(err)
+
+
+def test_simsan_lane_overlap():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    net.occupy_link("n0", 10.0)     # n0 has node_links lanes; fill them all
+    for _ in range(max(1, net.model.node_links) - 1):
+        net.occupy_link("n0", 10.0)
+    with pytest.raises(SanitizerError) as ei:
+        san.link_hold("n0", 5.0, 6.0, "test transfer n0->n1")
+    assert ei.value.check == "lane-overlap"
+    assert "test transfer" in str(ei.value)
+    with pytest.raises(SanitizerError) as ei:
+        san.link_hold("n0", 20.0, 19.0, "backwards hold")
+    assert ei.value.check == "negative-hold"
+
+
+def test_simsan_channel_monotonicity():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    net.set_channel_busy("n0", "n1", 10.0)
+    with pytest.raises(SanitizerError) as ei:
+        san.channel_hold("n0", "n1", 4.0, 12.0, "overlapping read")
+    assert ei.value.check == "channel-overlap"
+    with pytest.raises(SanitizerError) as ei:
+        san.channel_hold("n0", "n1", 10.0, 9.0, "rewinding read")
+    assert ei.value.check in ("channel-backward", "negative-hold")
+
+
+def test_simsan_meter_drift_names_op():
+    """Corrupting the byte meter between charges is caught at the next
+    charge, and the error names the charging op."""
+    net, _ = sanitized_net()
+    t = net.transport_obj("dct")
+    t._charge("read", "n0", "n1", 1024, 1e-6)
+    net.meter["dct.bytes"] += 17        # out-of-band corruption
+    with pytest.raises(SanitizerError) as ei:
+        t._charge("read", "n0", "n1", 1024, 1e-6)
+    assert ei.value.check == "meter-drift"
+    assert "dct read n0->n1" in str(ei.value)
+    assert ei.value.context["meter_bytes"] == pytest.approx(
+        ei.value.context["expected"] + 17)
+
+
+def test_simsan_meter_reset_clears_shadow():
+    net, _ = sanitized_net()
+    t = net.transport_obj("dct")
+    t._charge("read", "n0", "n1", 512, 1e-6)
+    net.reset_meter()
+    t._charge("read", "n0", "n1", 256, 1e-6)    # must not raise
+    assert net.meter["dct.bytes"] == 256
+
+
+def test_simsan_retry_payload_conservation():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    net.meter["dct.bytes"] = 100
+    san.retry_conserved("dct", 100, "dct read retry n0->n1")
+    net.meter["dct.bytes"] = 164        # a faulted attempt moved bytes
+    with pytest.raises(SanitizerError) as ei:
+        san.retry_conserved("dct", 100, "dct read retry n0->n1")
+    assert ei.value.check == "retry-payload"
+
+
+def test_simsan_payload_conservation():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    wire = np.zeros((4, 128), np.float32)
+    san.tag_payload(wire, "dct", rows=4, nbytes=4 * 128 * 4)
+    with pytest.raises(SanitizerError) as ei:
+        san.adopt_payload(wire, rows=3, row_bytes=128 * 4, op="adopt w@n0")
+    assert ei.value.check == "payload-conservation"
+    assert ei.value.context["wire_rows"] == 4
+    # untagged arrays (cache hits, RPC replies) pass through untouched
+    san.adopt_payload(np.zeros((2, 128), np.float32), rows=2,
+                      row_bytes=128 * 4, op="adopt cachehit")
+    # a correctly adopted tag is consumed
+    san.tag_payload(wire, "dct", rows=4, nbytes=4 * 128 * 4)
+    san.adopt_payload(wire, rows=4, row_bytes=128 * 4, op="adopt w@n0")
+    assert san.stats()["pending_payloads"] == 0
+
+
+def test_simsan_evicted_conn_use():
+    net, _ = sanitized_net()
+    t = net.transport_obj("dct")
+    net.conns.acquire(t, "n0", "n1", user="i0")
+    conn = net.conns.conns[("dct", "dci", "n0")]
+    net.conns.evict(conn)
+    with pytest.raises(SanitizerError) as ei:
+        net.conns._touch(conn, None)
+    assert ei.value.check == "evicted-conn-use"
+
+
+def test_simsan_refcount_corruption():
+    net, _ = sanitized_net()
+    t = net.transport_obj("dct")
+    net.conns.acquire(t, "n0", "n1", user="i0")
+    key = ("dct", "dci", "n0")
+    # index says "ghost" holds a reference; the conn disagrees
+    net.conns._user_index["ghost"] = {key}
+    with pytest.raises(SanitizerError) as ei:
+        net.sanitizer.check_conns(net.conns, "audit")
+    assert ei.value.check == "refcount-dangling"
+
+
+def test_simsan_conn_slot_corruption():
+    net, _ = sanitized_net()
+    t = net.transport_obj("dct")
+    net.conns.acquire(t, "n0", "n1", user="i0")
+    key = ("dct", "tgt", "n1")
+    # rip the pool slot out from under a live connection
+    net.conns.pools["n1"].remove(key)
+    with pytest.raises(SanitizerError) as ei:
+        net.sanitizer.check_conns(net.conns, "audit")
+    assert ei.value.check == "conn-slot-missing"
+
+
+def test_simsan_lease_edges():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    san.lease_register("n0", 1)
+    with pytest.raises(SanitizerError) as ei:
+        san.lease_register("n0", 1)     # id reused while live
+    assert ei.value.check == "lease-edge"
+    san.lease_renew("n0", 1)
+    san.lease_reclaim("n0", 1)
+    with pytest.raises(SanitizerError) as ei:
+        san.lease_renew("n0", 1)        # renewing a reclaimed lease
+    assert ei.value.check == "lease-edge"
+    assert ei.value.context["state"] == "reclaimed"
+    with pytest.raises(SanitizerError):
+        san.lease_revoke("n0", 2)       # never registered
+    san.lease_register("n0", 1)         # reclaimed ids may be reused
+
+
+def test_simsan_lease_crash_edge():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    san.lease_register("n0", 1)
+    san.node_crashed("n0")
+    with pytest.raises(SanitizerError) as ei:
+        san.lease_renew("n0", 1)
+    assert ei.value.context["state"] == "reclaimed"
+
+
+def test_simsan_parent_lost_exactly_once():
+    net, _ = sanitized_net()
+    san = net.sanitizer
+    san.parent_lost("f", "n1")
+    with pytest.raises(SanitizerError) as ei:
+        san.parent_lost("f", "n1")
+    assert ei.value.check == "parent-lost-twice"
+    # a re-registered node is a fresh incarnation: counting again is legal
+    san.node_registered("n1")
+    san.parent_lost("f", "n1")
+
+
+def _spike_engine(sanitize, tiebreak_seed=None):
+    fn = SimFunction("spike", state_bytes=16 * 128 * 4, touch_frac=0.1,
+                     exec_s=0.030, coldstart_s=0.167, hold_s=60.0)
+    net, nodes = build_cluster(8, page_elems=128, sanitize=sanitize)
+    return ReplayEngine(spike_660323(scale=1), ForkOnDemand(replicas=2),
+                        [fn], network=net, nodes=nodes, seed=11,
+                        page_elems=128, tiebreak_seed=tiebreak_seed)
+
+
+def test_simsan_replay_is_digest_identical():
+    """The sanitizer observes; it never perturbs clocks or meters."""
+    plain = _spike_engine(sanitize=False).run().summary()
+    eng = _spike_engine(sanitize=True)
+    sanitized = eng.run().summary()
+    assert sanitized == plain
+    stats = eng.net.sanitizer.stats()
+    assert stats["checks"] > 100        # the hooks actually ran
+    assert stats["pending_payloads"] == 0
+
+
+# ---------------------------------------------------------------------------
+# event-loop priorities + seeded tiebreak shuffling
+# ---------------------------------------------------------------------------
+
+def test_eventloop_priority_orders_same_time_events():
+    loop = EventLoop()
+    out = []
+    loop.at(1.0, out.append, "gc", priority=10)
+    loop.at(1.0, out.append, "arrival", priority=0)
+    loop.at(1.0, out.append, "sample", priority=20)
+    loop.at(1.0, out.append, "arrival2", priority=0)
+    loop.run()
+    assert out == ["arrival", "arrival2", "gc", "sample"]
+
+
+def test_eventloop_tiebreak_shuffles_within_class_only():
+    def order(ts):
+        loop = EventLoop(tiebreak_seed=ts)
+        out = []
+        for i in range(8):
+            loop.at(1.0, out.append, f"a{i}", priority=0)
+        loop.at(1.0, out.append, "z", priority=5)
+        loop.run()
+        return out
+    base = order(None)
+    assert base == [f"a{i}" for i in range(8)] + ["z"]
+    shuffled = [order(s) for s in range(1, 6)]
+    assert any(s != base for s in shuffled), \
+        "five seeds never permuted an 8-way tie"
+    for s in shuffled:
+        assert s[-1] == "z"             # cross-priority order is pinned
+        assert sorted(s[:-1]) == sorted(base[:-1])
+
+
+# ---------------------------------------------------------------------------
+# race detector
+# ---------------------------------------------------------------------------
+
+def _planted_race_run(tiebreak_seed, *, cascade=False):
+    """Two same-(time, priority) handlers whose ORDER changes the result
+    (last write wins); with ``cascade`` the winner also schedules extra
+    work, so the event log itself diverges."""
+    loop = EventLoop(tiebreak_seed=tiebreak_seed)
+    state = {}
+
+    def write(v):
+        first = "winner" not in state
+        state["winner"] = v
+        # only a FIRST-running "b" spawns the follow-up, so the schedule
+        # itself (not just the result) depends on dispatch order
+        if cascade and first and v == "b":
+            loop.after(1.0, lambda: None, label="b-followup")
+    loop.at(1.0, write, "a", label="write-a")
+    loop.at(1.0, write, "b", label="write-b")
+    loop.run()
+    return list(loop.log), {"winner": state["winner"],
+                            "event_log_digest": "ignored"}
+
+
+def test_race_detector_finds_planted_race():
+    report = compare_runs(lambda ts: _planted_race_run(ts),
+                          seeds=range(1, 6))
+    assert report.racy
+    assert report.changed_keys == ["winner"]
+    assert report.racy_seed in range(1, 6)
+    assert "RACE" in report.describe()
+    # same dispatched-label multiset at t=1 -> the log view CANNOT see
+    # this one; the semantic summary is what catches it
+    assert report.first_divergence is None
+
+
+def test_race_detector_pinpoints_log_divergence():
+    report = compare_runs(
+        lambda ts: _planted_race_run(ts, cascade=True), seeds=range(1, 6))
+    assert report.racy
+    d = report.first_divergence
+    assert d is not None
+    assert d["time"] == 2.0
+    assert "b-followup" in d["baseline"] + d["shuffled"]
+
+
+def test_race_detector_race_free_negative():
+    def commutative(ts):
+        loop = EventLoop(tiebreak_seed=ts)
+        acc = []
+        for i in range(6):
+            loop.at(1.0, acc.append, i, label=f"add{i}")
+        loop.run()
+        return list(loop.log), {"total": sum(acc),
+                                "event_log_digest": "ignored"}
+    report = compare_runs(commutative, seeds=range(1, 6))
+    assert not report.racy
+    assert "race-free" in report.describe()
+    assert report.to_dict()["racy"] is False
+
+
+def test_first_log_divergence_groups_by_time():
+    a = [(1.0, "x"), (1.0, "y"), (2.0, "z")]
+    b = [(1.0, "y"), (1.0, "x"), (2.0, "z")]      # reorder within t=1: fine
+    assert first_log_divergence(a, b) is None
+    c = [(1.0, "x"), (1.0, "y"), (2.0, "w")]
+    d = first_log_divergence(a, c)
+    assert d == {"time": 2.0, "baseline": ["z"], "shuffled": ["w"]}
+    # one log simply ends early
+    d = first_log_divergence(a, a[:-1])
+    assert d is not None and d["time"] == 2.0
+
+
+def test_semantic_summary_strips_log_digest():
+    s = {"invocations": 3, "event_log_digest": "abc"}
+    assert semantic_summary(s) == {"invocations": 3}
+
+
+def test_race_detector_on_replay_engine():
+    """The real replay stack is race-free under tiebreak shuffling (the
+    CI smoke runs the bigger fig20-style version of this)."""
+    report = detect(lambda ts: _spike_engine(sanitize=False,
+                                             tiebreak_seed=ts),
+                    seeds=(1, 2))
+    assert not report.racy, report.describe()
